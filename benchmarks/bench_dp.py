@@ -1,0 +1,56 @@
+"""1D + GAP benchmarks — Theorems 6/7 validation.
+
+Measures wall time vs reference and the planner's balance/half-perimeter
+invariants that drive the communication bounds.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import (gap_reference, onedim_reference, paco_gap,
+                        paco_onedim, partition_square)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 128
+    w = jnp.array(rng.random((n + 1, n + 1)), jnp.float32)
+    t_ref = timeit(onedim_reference, w)
+    row(f"onedim_ref_{n}", t_ref)
+    for p in (4, 8):
+        got = paco_onedim(w, p)
+        assert float(jnp.max(jnp.abs(got - onedim_reference(w)))) < 1e-4
+        t = timeit(lambda: paco_onedim(w, p))
+        row(f"onedim_paco_p{p}_{n}", t, f"vs_ref={t / t_ref:.2f}x")
+    # square-partition invariants (drive Theorem 6's comm bound)
+    for p in (3, 7, 16):
+        rects = partition_square(0, 4096, 0, 4096, tuple(range(p)))
+        hp = max(r.half_perimeter() for r in rects)
+        bound = 4 * 4096 / math.sqrt(p) + 2
+        row(f"onedim_halfperim_p{p}", 0.0,
+            f"max_hp={hp} theory_bound={bound:.0f}")
+    # GAP (small n — reference is O(n^3) python)
+    ng = 20
+    s = rng.random((ng + 1, ng + 1))
+    wg = rng.random((ng + 1, ng + 1))
+    w2 = rng.random((ng + 1, ng + 1))
+    ref = gap_reference(s, wg, w2)
+    t_ref = timeit(lambda: gap_reference(s, wg, w2), reps=1, warmup=0)
+    row(f"gap_ref_{ng}", t_ref)
+    for p in (2, 4):
+        got = np.array(paco_gap(jnp.array(s), jnp.array(wg),
+                                jnp.array(w2), p, tile=7))
+        err = np.max(np.abs(got - ref))
+        t = timeit(lambda: paco_gap(jnp.array(s), jnp.array(wg),
+                                    jnp.array(w2), p, tile=7),
+                   reps=1, warmup=1)
+        row(f"gap_paco_p{p}_{ng}", t, f"err={err:.1e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""LCS benchmark — paper Fig 12a analogue.
+
+PACO (tiled wavefront, p-aware tiling) vs PO (full 2-way recursion to a
+fixed base, simulated sequentially) vs PA (p-way top-level split a la
+Chowdhury-Ramachandran).  Also validates Corollary 3 partition overheads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import lcs_reference, paco_lcs, partition_lcs
+from repro.core.lcs import lcs_tile
+
+
+def po_lcs(s, t, base=128):
+    """PO counterpart: recursion to constant base => many tiny tiles (the
+    slackness the paper argues costs communication)."""
+    return paco_lcs(s, t, p=1, tile=base)
+
+
+def pa_lcs(s, t, p=8):
+    """PA counterpart: one p-way top split only (tile = n/p)."""
+    return paco_lcs(s, t, p=p, tile=s.shape[0] // p)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 1024
+    s = jnp.array(rng.integers(0, 4, n), jnp.int32)
+    t = jnp.array(rng.integers(0, 4, n), jnp.int32)
+    want = int(lcs_reference(s, t))
+    t_ref = timeit(lcs_reference, s, t)
+    row(f"lcs_rowscan_{n}", t_ref, f"len={want}")
+    for name, fn in [("paco_p8", lambda: paco_lcs(s, t, 8)),
+                     ("po_base64", lambda: po_lcs(s, t)),
+                     ("pa_p8", lambda: pa_lcs(s, t))]:
+        got = int(fn())
+        assert got == want, (name, got, want)
+        tt = timeit(lambda: fn())
+        row(f"lcs_{name}_{n}", tt, f"vs_rowscan={tt / t_ref:.2f}x")
+    # partition overheads (Corollary 3: O(p^2 n))
+    for p in (4, 8, 16):
+        plan = partition_lcs(4096, p)
+        row(f"lcs_partition_p{p}", 0.0,
+            f"regions={plan.partition_overhead()} bound={16 * p * p * 4096}")
+
+
+if __name__ == "__main__":
+    main()

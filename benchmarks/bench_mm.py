@@ -1,0 +1,66 @@
+"""MM benchmark — paper Table IV + Figs 9-11 analogue.
+
+On CPU we measure (a) wall time of the PACO tile executor vs XLA's native
+dot vs the naive 2-way PO recursion, at the paper's shape sweep (scaled
+down), and (b) the *communication cost model*: PACO 1-piece plan bytes vs
+fixed Megatron-style sharding, for the paper's rectangular shapes at
+p = 256 — the quantity that becomes the collective roofline term on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import (megatron_comm_bytes, paco_matmul, plan_mm_1piece,
+                        strassen)
+
+
+def po_recursive_mm(a, b, base=256):
+    """PO counterpart: depth-n 2-way divide and conquer (paper's CO2)."""
+    n, k = a.shape
+    _, m = b.shape
+    if max(n, m, k) <= base:
+        return a @ b
+    if n >= m and n >= k:
+        h = n // 2
+        return jnp.concatenate([po_recursive_mm(a[:h], b, base),
+                                po_recursive_mm(a[h:], b, base)], axis=0)
+    if m >= k:
+        h = m // 2
+        return jnp.concatenate([po_recursive_mm(a, b[:, :h], base),
+                                po_recursive_mm(a, b[:, h:], base)], axis=1)
+    h = k // 2
+    return (po_recursive_mm(a[:, :h], b[:h], base)
+            + po_recursive_mm(a[:, h:], b[h:], base))
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # --- wall time (scaled-down Fig 9/10 sweep) ---------------------------
+    for n, m, k in [(512, 512, 512), (1024, 512, 256), (2048, 256, 128)]:
+        a = jax.random.normal(key, (n, k), jnp.float32)
+        b = jax.random.normal(key, (k, m), jnp.float32)
+        t_xla = timeit(jax.jit(jnp.matmul), a, b)
+        t_paco = timeit(lambda a, b: paco_matmul(a, b, 8), a, b)
+        t_po = timeit(lambda a, b: po_recursive_mm(a, b), a, b)
+        row(f"mm_xla_{n}x{m}x{k}", t_xla)
+        row(f"mm_paco_p8_{n}x{m}x{k}", t_paco,
+            f"vs_xla={t_paco / t_xla:.2f}x")
+        row(f"mm_po2way_{n}x{m}x{k}", t_po, f"vs_xla={t_po / t_xla:.2f}x")
+    # --- communication model at p=256 (Table I comm bounds) ---------------
+    p = 256
+    for n, m, k in [(8192, 8192, 8192), (65536, 8192, 512),
+                    (1048576, 5120, 1536), (5120, 1536, 1048576)]:
+        plan = plan_mm_1piece(n, m, k, p)
+        paco_b = plan.comm_bytes()
+        fixed_b = megatron_comm_bytes(n, m, k, p, shard="m")
+        v = plan.per_proc_volume()
+        imb = (max(v) - min(v)) / (sum(v) / p)
+        row(f"mmcomm_paco_{n}x{m}x{k}_p{p}", 0.0,
+            f"bytes={paco_b} fixed={fixed_b} "
+            f"saving={fixed_b / paco_b:.2f}x imb={imb:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Sample-sort benchmark — paper Fig 12b analogue (PACO SORT vs PBBS).
+
+On one host we compare against jnp.sort (the tuned baseline) and validate
+Theorem 16's (1+eps) bucket balance across sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import paco_sort
+
+
+def main() -> None:
+    for n in (1 << 14, 1 << 17, 1 << 20):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (n,), jnp.float32)
+        t_ref = timeit(jax.jit(jnp.sort), x)
+        row(f"sort_xla_{n}", t_ref)
+        p = 8
+        key = jax.random.PRNGKey(1)
+        got, sizes = paco_sort(x, p, key)
+        assert bool(jnp.all(got == jnp.sort(x)))
+        t = timeit(lambda: paco_sort(x, p, key)[0])
+        bal = float(jnp.max(sizes)) / (n / p)
+        row(f"sort_paco_p{p}_{n}", t,
+            f"vs_xla={t / t_ref:.2f}x max_bucket={bal:.2f}x_mean")
+
+
+if __name__ == "__main__":
+    main()

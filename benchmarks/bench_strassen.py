@@ -1,0 +1,63 @@
+"""Strassen benchmark — Theorem 13 / CAPS-comparison analogue.
+
+Measures: wall time vs classic matmul at increasing depth, the (7/8)^d flop
+ratio, plan balance for awkward processor counts (the paper's headline:
+arbitrary p, even primes, vs CAPS's p = m*7^k), and numerical error.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import (OMEGA0, paco_strassen, plan_strassen, strassen,
+                        strassen_beneficial_depth)
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    n = 1024
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+    c_ref = a @ b
+    t0 = timeit(jax.jit(jnp.matmul), a, b)
+    row(f"strassen_d0_{n}", t0, "classic")
+    for d in (1, 2):
+        fn = jax.jit(lambda x, y: strassen(x, y, d))
+        t = timeit(fn, a, b)
+        err = float(jnp.max(jnp.abs(fn(a, b) - c_ref)))
+        flop_ratio = (7 / 8) ** d
+        row(f"strassen_d{d}_{n}", t,
+            f"flop_ratio={flop_ratio:.3f} err={err:.2e} "
+            f"vs_classic={t / t0:.2f}x")
+    # plan balance for awkward p (vs CAPS needing p = m*7^k)
+    for p in (5, 11, 13, 17, 100):
+        asg = plan_strassen(2 ** 14, p, base=2 ** 8)
+        loads = [sum(nd.size ** OMEGA0 for nd in nodes)
+                 for nodes in asg.by_proc]
+        imb = (max(loads) - min(loads)) / (sum(loads) / p)
+        row(f"strassen_plan_p{p}", 0.0,
+            f"imbalance={imb:.4f} super_rounds={asg.super_rounds}")
+    # CONST-PIECES gamma sweep (Corollary 14: <=1% imbalance at gamma=8)
+    for gamma in (1, 2, 4, 8):
+        asg = plan_strassen(2 ** 14, 5, base=2 ** 4, gamma=gamma)
+        loads = [sum(nd.size ** OMEGA0 for nd in nodes)
+                 for nodes in asg.by_proc]
+        imb = (max(loads) - min(loads)) / (sum(loads) / 5)
+        row(f"strassen_gamma{gamma}_p5", 0.0, f"imbalance={imb:.4f}")
+    # TPU cost-model gate
+    for n_big in (4096, 65536):
+        row(f"strassen_gate_n{n_big}", 0.0,
+            f"beneficial_depth={strassen_beneficial_depth(n_big)}")
+    # numerics of the PACO-partitioned execution
+    err = float(jnp.max(jnp.abs(paco_strassen(a[:256, :256], b[:256, :256],
+                                              7, depth=2)
+                                - a[:256, :256] @ b[:256, :256])))
+    row("paco_strassen_p7_err", 0.0, f"err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark helpers: timing + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Min wall time (us) over reps — the paper's measurement protocol
+    ('min of at least three independent runs', Sect. IV)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def flush_header() -> None:
+    print("name,us_per_call,derived", flush=True)

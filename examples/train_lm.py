@@ -1,0 +1,68 @@
+"""End-to-end training driver: train a LM on synthetic data with the full
+substrate (PACO shardings, AdamW, checkpointing, deterministic pipeline).
+
+Default is a fast CPU-sized run; ``--preset 100m`` trains a ~100M-param
+qwen3-family model for a few hundred steps (the deliverable-(b) driver —
+give it a beefy machine or a real pod):
+
+  PYTHONPATH=src python examples/train_lm.py                 # ~2M, quick
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import DataConfig
+from repro.dist.act_sharding import use_mesh_rules
+from repro.ft.elastic import make_mesh_for
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def build_config(preset: str):
+    base = get_arch("qwen3-0.6b")
+    if preset == "tiny":
+        return dataclasses.replace(
+            base.reduced(), n_layers=4, d_model=128, d_ff=512, vocab=2048)
+    if preset == "100m":
+        # ~100M params: 12L x 768 with a 32k vocab (GPT-2-small class)
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=3072, vocab=32768, q_chunk=256,
+            param_dtype="float32", tie_embeddings=True)
+    raise ValueError(preset)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    cfg = build_config(args.preset)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab=cfg.vocab)
+    tcfg = TrainConfig(opt=AdamWConfig(
+        lr=3e-4, warmup_steps=max(10, args.steps // 20),
+        total_steps=args.steps))
+    mesh = make_mesh_for(jax.devices())
+    trainer = Trainer(cfg, tcfg, dcfg, ckpt_dir=args.ckpt_dir,
+                      log_every=max(1, args.steps // 20))
+    with use_mesh_rules(mesh):
+        params, state, hist = trainer.run(args.steps)
+    losses = [h["loss"] for h in hist]
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"\n{n_params / 1e6:.1f}M params | loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f} | "
+          f"{np.mean([h['step_time_s'] for h in hist[1:]]) * 1e3:.0f} "
+          f"ms/step")
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), "did not learn"
+
+
+if __name__ == "__main__":
+    main()

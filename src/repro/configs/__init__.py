@@ -1,0 +1,10 @@
+from repro.configs.base import (
+    ArchConfig, MLAConfig, MoEConfig, SSMConfig, ShapeCell, SHAPES,
+    cell_applicable,
+)
+from repro.configs.registry import ARCHS, get_arch
+
+__all__ = [
+    "ArchConfig", "MLAConfig", "MoEConfig", "SSMConfig", "ShapeCell",
+    "SHAPES", "cell_applicable", "ARCHS", "get_arch",
+]

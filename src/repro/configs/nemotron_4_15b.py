@@ -1,0 +1,5 @@
+"""Assigned architecture config — see registry.py for the
+exact hyperparameters and source citation."""
+from repro.configs.registry import NEMOTRON_4_15B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,5 @@
+"""Assigned architecture config — see registry.py for the
+exact hyperparameters and source citation."""
+from repro.configs.registry import OLMOE_1B_7B as CONFIG
+
+__all__ = ["CONFIG"]

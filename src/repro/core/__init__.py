@@ -1,0 +1,33 @@
+"""PACO core: the paper's contribution — processor-aware cache-oblivious
+partitioning of divide-and-conquer algorithms (Tang & Gao, 2020)."""
+from repro.core.tree import Assignment, pruned_bfs, geometric_decrease_ok
+from repro.core.cuboid import (
+    Cuboid, MMPlan, plan_mm, plan_mm_1piece, plan_hetero, mesh_factors,
+    megatron_comm_bytes,
+)
+from repro.core.matmul import (
+    paco_matmul, paco_matmul_shmap, paco_matmul_pjit, paco_spec,
+    make_paco_mesh,
+)
+from repro.core.strassen import (
+    strassen, paco_strassen, plan_strassen, strassen_beneficial_depth,
+    OMEGA0,
+)
+from repro.core.lcs import lcs_reference, paco_lcs, partition_lcs, LCSPlan
+from repro.core.onedim import onedim_reference, paco_onedim, partition_square
+from repro.core.gap import gap_reference, paco_gap
+from repro.core.sort import paco_sort, paco_sort_shmap, choose_pivots
+
+__all__ = [
+    "Assignment", "pruned_bfs", "geometric_decrease_ok",
+    "Cuboid", "MMPlan", "plan_mm", "plan_mm_1piece", "plan_hetero",
+    "mesh_factors", "megatron_comm_bytes",
+    "paco_matmul", "paco_matmul_shmap", "paco_matmul_pjit", "paco_spec",
+    "make_paco_mesh",
+    "strassen", "paco_strassen", "plan_strassen",
+    "strassen_beneficial_depth", "OMEGA0",
+    "lcs_reference", "paco_lcs", "partition_lcs", "LCSPlan",
+    "onedim_reference", "paco_onedim", "partition_square",
+    "gap_reference", "paco_gap",
+    "paco_sort", "paco_sort_shmap", "choose_pivots",
+]

@@ -1,0 +1,109 @@
+"""PACO GAP (paper Sect. III-D, Theorem 7) — 2-D version of the 1D problem.
+
+    D[i,j] = min( D[i-1,j-1] + s[i,j],
+                  min_{0 <= q < j} D[i,q] + w[q,j],
+                  min_{0 <= q < i} D[q,j] + w2[q,i] )
+
+The work is a 3-D solid; self-updates are 3-D triangle analogues and external
+updates are cubes.  PACO partitions each external cube of dims a x b x c into
+p slabs along the *output* dimension so all slabs update disjoint regions
+simultaneously; slabs recurse into the self-updating children (Theorem 7).
+
+An external cube update is a (min,+) matrix product:
+    out[i, j] = min_q ( D[i, q] + w[q, j] )        (row/horizontal cube)
+    out[i, j] = min_q ( D[q, j] + w2[q, i] )       (col/vertical cube)
+so the executor maps cubes to batched min-plus products, tiled per plan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gap_reference(s: np.ndarray, w: np.ndarray, w2: np.ndarray,
+                  ) -> np.ndarray:
+    """Exact O(n^3) reference (numpy, row-scan).  Shapes:
+    s (n+1, n+1); w (n+1, n+1) with w[q, j]; w2 (n+1, n+1) with w2[q, i]."""
+    n = s.shape[0] - 1
+    big = np.float64(np.inf)
+    d = np.full((n + 1, n + 1), big)
+    d[0, 0] = 0.0
+    for i in range(0, n + 1):
+        for j in range(0, n + 1):
+            if i == 0 and j == 0:
+                continue
+            best = big
+            if i > 0 and j > 0:
+                best = min(best, d[i - 1, j - 1] + s[i, j])
+            if j > 0:
+                best = min(best, np.min(d[i, :j] + w[:j, j]))
+            if i > 0:
+                best = min(best, np.min(d[:i, j] + w2[:i, i]))
+            d[i, j] = best
+    return d
+
+
+def _minplus(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(min,+) product: out[a,b] = min_q x[a,q] + y[q,b]."""
+    return jnp.min(x[:, :, None] + y[None, :, :], axis=1)
+
+
+def paco_gap(s: jax.Array, w: jax.Array, w2: jax.Array, p: int, *,
+             tile: int | None = None) -> jax.Array:
+    """PACO GAP: tiled wavefront; external cube updates run as PACO-planned
+    (min,+) products partitioned into p output slabs (conceptually one per
+    processor); within-tile self-update is the sequential base case."""
+    n = s.shape[0] - 1
+    if tile is None:
+        tile = max(1, (n + 1) >> max(1, (p - 1).bit_length()))
+    nt = -(-(n + 1) // tile)
+    pad = nt * tile - (n + 1)
+    big = jnp.asarray(jnp.inf, s.dtype)
+    d = jnp.full((nt * tile, nt * tile), big).at[0, 0].set(0.0)
+    sp = jnp.pad(s, ((0, pad), (0, pad)), constant_values=jnp.inf)
+    wp = jnp.pad(w, ((0, pad), (0, pad)), constant_values=jnp.inf)
+    w2p = jnp.pad(w2, ((0, pad), (0, pad)), constant_values=jnp.inf)
+
+    def tile_self_update(d: jax.Array, bi: int, bj: int) -> jax.Array:
+        """Sequential DP inside tile (bi,bj) given externals applied."""
+        i0, j0 = bi * tile, bj * tile
+        for ii in range(tile):
+            for jj in range(tile):
+                i, j = i0 + ii, j0 + jj
+                if i == 0 and j == 0:
+                    continue
+                best = d[i, j]
+                if i > 0 and j > 0:
+                    best = jnp.minimum(best, d[i - 1, j - 1] + sp[i, j])
+                if jj > 0:  # within-tile row candidates
+                    best = jnp.minimum(
+                        best, jnp.min(d[i, j0:j] + wp[j0:j, j]))
+                if ii > 0:  # within-tile col candidates
+                    best = jnp.minimum(
+                        best, jnp.min(d[i0:i, j] + w2p[i0:i, i]))
+                d = d.at[i, j].set(best)
+        return d
+
+    # Wavefront over tile anti-diagonals; before a tile's self-update, apply
+    # all external cubes from finished tiles (left => row cubes, top => col
+    # cubes).  Each cube is a (min,+) product over a q-slab — the unit the
+    # PACO plan distributes (p slabs per cube; here slabs = source tiles).
+    for diag in range(2 * nt - 1):
+        for bi in range(max(0, diag - nt + 1), min(nt, diag + 1)):
+            bj = diag - bi
+            i0, j0 = bi * tile, bj * tile
+            isl = slice(i0, i0 + tile)
+            jsl = slice(j0, j0 + tile)
+            # row (horizontal) external updates from tiles left of (bi,bj)
+            for bq in range(bj):
+                q = slice(bq * tile, (bq + 1) * tile)
+                upd = _minplus(d[isl, q], wp[q, jsl])
+                d = d.at[isl, jsl].min(upd)
+            # col (vertical) external updates from tiles above (bi,bj)
+            for bq in range(bi):
+                q = slice(bq * tile, (bq + 1) * tile)
+                upd = _minplus(w2p[q, isl].T, d[q, jsl])
+                d = d.at[isl, jsl].min(upd)
+            d = tile_self_update(d, bi, bj)
+    return d[: n + 1, : n + 1]

@@ -1,0 +1,206 @@
+"""PACO LCS (paper Sect. III-B, Theorem 2).
+
+Two phases, exactly as the paper:
+  1. *Partition*: recursive 2-way division of the 2-D DP table; as soon as
+     an anti-diagonal holds >= p sub-regions they are assigned round-robin
+     (labels in Fig. 3); division stops on assigned regions.
+  2. *Execute*: sub-regions run anti-diagonal by anti-diagonal (a wavefront);
+     each sub-region runs the sequential cache-oblivious LCS; dependencies
+     are only on the two neighbouring regions, so no global barrier.
+
+The LCS row recurrence X[i,j] = max(X[i-1,j], X[i-1,j-1]+eq, X[i,j-1]) is
+monotone in j, so a row update is a running max:  X[i,:] = cummax(a) with
+a_j = max(X[i-1,j], X[i-1,j-1]+eq_ij).  This gives a vectorized wavefront
+with O(n) scan steps — the TPU-native realization of the paper's wavefront
+(VPU row sweeps instead of per-cell task parallelism; DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference (Lemma 1's CO-LCS semantics)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def lcs_reference(s: jax.Array, t: jax.Array) -> jax.Array:
+    """Length of the LCS of integer sequences s (m,) and t (n,)."""
+    n = t.shape[0]
+
+    def row(prev, si):
+        eq = (t == si).astype(prev.dtype)
+        diag = jnp.concatenate([jnp.zeros((1,), prev.dtype), prev[:-1]])
+        a = jnp.maximum(prev, diag + eq)
+        cur = jax.lax.cummax(a)
+        return cur, None
+
+    last, _ = jax.lax.scan(row, jnp.zeros((n,), jnp.int32), s)
+    return last[-1]
+
+
+@jax.jit
+def lcs_tile(s_tile: jax.Array, t_tile: jax.Array, top: jax.Array,
+             left: jax.Array, corner: jax.Array
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sequential LCS over one tile given its borders.
+
+    top:    X[i0-1, j0:j1]  (len tn)
+    left:   X[i0:i1, j0-1]  (len tm)
+    corner: X[i0-1, j0-1]
+    Returns (bottom_row, right_col, full_tile_bottom_right_value)."""
+    def row(carry, inp):
+        prev, prev_corner = carry  # prev = X[i-1, j0:j1], X[i-1, j0-1]
+        si, li = inp               # li = X[i, j0-1] (left border)
+        eq = (t_tile == si).astype(prev.dtype)
+        diag = jnp.concatenate([prev_corner[None], prev[:-1]])
+        a = jnp.maximum(prev, diag + eq)
+        a = a.at[0].max(li)  # left border feeds the running max
+        cur = jax.lax.cummax(jnp.maximum(a, 0))
+        cur = jnp.maximum(cur, li)  # monotone row: left border lower-bounds
+        return (cur, li), cur[-1]
+
+    (bottom, _), right = jax.lax.scan(
+        row, (top, corner), (s_tile, left))
+    return bottom, right, bottom[-1]
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: partition plan (Fig. 3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    i0: int
+    i1: int
+    j0: int
+    j1: int
+    label: int  # assignment order (1 = first assigned)
+    proc: int
+
+    def area(self) -> int:
+        return (self.i1 - self.i0) * (self.j1 - self.j0)
+
+    def half_perimeter(self) -> int:
+        return (self.i1 - self.i0) + (self.j1 - self.j0)
+
+    def antidiag(self) -> int:
+        # center-coordinate anti-diagonal id (paper: i+j of the center)
+        return (self.i0 + self.i1) + (self.j0 + self.j1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LCSPlan:
+    n: int
+    p: int
+    regions: tuple[Region, ...]
+
+    def partition_overhead(self) -> int:
+        """Number of generated leaves — Corollary 3 bounds this by O(p^2 n)."""
+        return len(self.regions)
+
+
+def partition_lcs(n: int, p: int, *, base: int = 8) -> LCSPlan:
+    """Recursive divide-and-assign of the n x n table (paper Fig. 3)."""
+    regions: list[Region] = []
+    label = 1
+    rr = 0
+    # Work anti-diagonal generation by generation.  At division round d the
+    # unassigned regions form a grid of 2^d x 2^d blocks; the anti-diagonal
+    # of blocks with index sum s has min(s+1, 2^d - s) blocks.  We divide
+    # until an anti-diagonal has >= p blocks, assign it, and keep dividing
+    # the remainder — realized by per-diagonal rounds below.
+    unassigned: list[tuple[int, int, int, int]] = [(0, n, 0, n)]
+    rounds = 0
+    while unassigned:
+        sizes = [(i1 - i0) for (i0, i1, _, _) in unassigned]
+        is_base_round = max(sizes) <= base
+        # group current unassigned regions by anti-diagonal
+        by_diag: dict[int, list[tuple[int, int, int, int]]] = {}
+        for r in unassigned:
+            d = (r[0] + r[1]) + (r[2] + r[3])
+            by_diag.setdefault(d, []).append(r)
+        next_unassigned: list[tuple[int, int, int, int]] = []
+        assigned_any = False
+        for d in sorted(by_diag):
+            group = by_diag[d]
+            if len(group) >= p or is_base_round:
+                take = group if is_base_round else group[:len(group) // p * p]
+                rest = [] if is_base_round else group[len(take):]
+                for (i0, i1, j0, j1) in take:
+                    regions.append(Region(i0, i1, j0, j1, label, rr % p))
+                    rr += 1
+                assigned_any = assigned_any or bool(take)
+                next_unassigned.extend(rest)
+            else:
+                next_unassigned.extend(group)
+        if assigned_any:
+            label += 1
+        # 2-way division (quadtree split: one round on i then one on j is
+        # equivalent to a quad split for the diagonal-count argument)
+        divided: list[tuple[int, int, int, int]] = []
+        for (i0, i1, j0, j1) in next_unassigned:
+            if (i1 - i0) <= base:
+                divided.append((i0, i1, j0, j1))
+                continue
+            im = (i0 + i1) // 2
+            jm = (j0 + j1) // 2
+            divided.extend([(i0, im, j0, jm), (i0, im, jm, j1),
+                            (im, i1, j0, jm), (im, i1, jm, j1)])
+        if not assigned_any and divided == unassigned:
+            # nothing assignable and nothing divisible => flush as base
+            for (i0, i1, j0, j1) in divided:
+                regions.append(Region(i0, i1, j0, j1, label, rr % p))
+                rr += 1
+            divided = []
+        unassigned = divided
+        rounds += 1
+        if rounds > 64:
+            raise RuntimeError("partition_lcs failed to converge")
+    return LCSPlan(n=n, p=p, regions=tuple(regions))
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: wavefront execution over uniform tiles
+# ---------------------------------------------------------------------------
+
+def paco_lcs(s: jax.Array, t: jax.Array, p: int, *,
+             tile: int | None = None) -> jax.Array:
+    """PACO LCS: tiled wavefront execution.
+
+    Tile size follows the first-assignment rule: the first anti-diagonal
+    with >= p tiles fixes the granularity (n / 2^ceil(log2 p) when uniform).
+    Tiles on one anti-diagonal are mutually independent (run on p procs);
+    borders flow to the right/bottom neighbours only — no global barrier.
+    """
+    m, n = s.shape[0], t.shape[0]
+    if tile is None:
+        tile = max(1, m >> max(1, (p - 1).bit_length()))
+    assert m % tile == 0 and n % tile == 0, (m, n, tile)
+    ti, tj = m // tile, n // tile
+    # borders: bottom[i][j] = bottom row of tile (i,j); right analogous
+    bottoms: dict[tuple[int, int], jax.Array] = {}
+    rights: dict[tuple[int, int], jax.Array] = {}
+    corners: dict[tuple[int, int], jax.Array] = {}
+    zero_row = jnp.zeros((tile,), jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    result = zero
+    for d in range(ti + tj - 1):  # anti-diagonals of tiles
+        for i in range(max(0, d - tj + 1), min(ti, d + 1)):
+            j = d - i
+            top = bottoms.get((i - 1, j), zero_row)
+            left = rights.get((i, j - 1), zero_row)
+            corner = corners.get((i - 1, j - 1), zero)
+            b, r, br = lcs_tile(
+                s[i * tile:(i + 1) * tile], t[j * tile:(j + 1) * tile],
+                top, left, corner)
+            bottoms[(i, j)] = b
+            rights[(i, j)] = r
+            corners[(i, j)] = br
+            if i == ti - 1 and j == tj - 1:
+                result = br
+    return result

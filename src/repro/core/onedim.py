@@ -1,0 +1,117 @@
+"""PACO 1D / least-weight-subsequence (paper Sect. III-C, Theorem 6).
+
+    D[j] = min_{0 <= i < j} ( D[i] + w(i, j) ),   D[0] given.
+
+The recursion computes a triangle: solve the left half, apply the square
+*external update* (all (i in left, j in right) pairs), solve the right half.
+PACO's change is only to the square: split along the longer dimension by the
+ratio floor(p'/2):ceil(p'/2), splitting the processor list identically, until
+one processor per rectangle.  A cut on the input (y) axis requires a
+temporary output vector and a min-merge (paper Fig. 6 lines 17-18).
+
+The external update over a rectangle is a (min,+) matrix-vector product —
+embarrassingly parallel over outputs; the PACO plan decides its tiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def onedim_reference(w: jax.Array, d0: float = 0.0) -> jax.Array:
+    """O(n^2) reference.  w is the (n+1, n+1) weight matrix w[i, j]."""
+    n = w.shape[0] - 1
+    big = jnp.asarray(jnp.inf, w.dtype)
+
+    def step(d, j):
+        cand = jnp.where(jnp.arange(n + 1) < j, d + w[:, j], big)
+        return d.at[j].set(jnp.min(cand)), None
+
+    d = jnp.full((n + 1,), big).at[0].set(d0)
+    d, _ = jax.lax.scan(step, d, jnp.arange(1, n + 1))
+    return d
+
+
+# ---------------------------------------------------------------------------
+# PACO partition of a square external update
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Rect:
+    """inputs [i0,i1) x outputs [j0,j1), owned by ``proc``."""
+
+    i0: int
+    i1: int
+    j0: int
+    j1: int
+    proc: int
+
+    def area(self) -> int:
+        return (self.i1 - self.i0) * (self.j1 - self.j0)
+
+    def half_perimeter(self) -> int:
+        return (self.i1 - self.i0) + (self.j1 - self.j0)
+
+
+def partition_square(i0: int, i1: int, j0: int, j1: int, procs: tuple[int, ...]
+                     ) -> list[Rect]:
+    """Paper's COP-1D square partitioning: cut the longer dim by
+    floor(p/2):ceil(p/2); y-cuts (input axis) imply temp+merge downstream."""
+    if len(procs) == 1:
+        return [Rect(i0, i1, j0, j1, procs[0])]
+    pl = len(procs) // 2
+    pr = len(procs) - pl
+    di, dj = i1 - i0, j1 - j0
+    if di >= dj:  # cut inputs (y): both halves update same outputs => merge
+        im = i0 + (di * pl) // (pl + pr)
+        return (partition_square(i0, im, j0, j1, procs[:pl]) +
+                partition_square(im, i1, j0, j1, procs[pl:]))
+    jm = j0 + (dj * pl) // (pl + pr)
+    return (partition_square(i0, i1, j0, jm, procs[:pl]) +
+            partition_square(i0, i1, jm, j1, procs[pl:]))
+
+
+def _external_update(d: jax.Array, w: jax.Array, i0: int, i1: int,
+                     j0: int, j1: int, p: int) -> jax.Array:
+    """Apply D[j] = min(D[j], min_{i in [i0,i1)} D[i] + w[i,j]) for
+    j in [j0,j1), tiled by the PACO plan (merge = min over tiles)."""
+    rects = partition_square(i0, i1, j0, j1, tuple(range(p)))
+    out = d
+    for r in rects:
+        if r.area() == 0:
+            continue
+        blk = d[r.i0:r.i1, None] + w[r.i0:r.i1, r.j0:r.j1]
+        upd = jnp.min(blk, axis=0)  # temp vector for this rect
+        out = out.at[r.j0:r.j1].min(upd)  # min-merge (Fig. 6 l.17-18)
+    return out
+
+
+def paco_onedim(w: jax.Array, p: int, d0: float = 0.0, *,
+                base: int = 4) -> jax.Array:
+    """PACO 1D: recursive triangle with PACO-partitioned square updates."""
+    n = w.shape[0] - 1
+    big = jnp.asarray(jnp.inf, w.dtype)
+    d = jnp.full((n + 1,), big).at[0].set(d0)
+
+    def seq_base(d: jax.Array, lo: int, hi: int) -> jax.Array:
+        # D[lo] is final on entry; finalize D[lo+1 .. hi-1].
+        for j in range(lo + 1, hi):
+            cand = d[lo:j] + w[lo:j, j]
+            d = d.at[j].min(jnp.min(cand))
+        return d
+
+    def tri(d: jax.Array, lo: int, hi: int) -> jax.Array:
+        # solves D[lo+1..hi) given D[lo] and any external updates already
+        # applied from inputs < lo.
+        if hi - lo <= base:
+            return seq_base(d, lo, hi)
+        mid = (lo + hi) // 2
+        d = tri(d, lo, mid)                       # (0,0) triangle
+        d = _external_update(d, w, lo, mid, mid, hi, p)  # (0,1) square
+        d = tri(d, mid, hi)                       # (1,1) triangle
+        return d
+
+    return tri(d, 0, n + 1)

@@ -1,0 +1,195 @@
+"""PACO Strassen (paper Sect. III-F, Theorem 13 / Corollary 14).
+
+Strassen's 7-way recursion expressed in JAX, partitioned by the paper's
+pruned BFS of the 7-ary tree.  The CONST-PIECES variant stops dividing after
+``gamma`` super-rounds (<=1% imbalance at gamma=8) — this is the paper's
+"almost exact" answer to Ballard et al.'s open problem: arbitrary p (prime
+included), exact flop lower bound, bandwidth within a constant, O(log p)
+latency.
+
+On TPU the MXU makes classic matmul's effective flop rate much higher than
+the VPU additions Strassen substitutes, so the crossover depth is large; the
+cost model ``strassen_beneficial_depth`` gates it (DESIGN.md §7.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as paco_tree
+
+OMEGA0 = 2.8073549220576042  # log2(7)
+
+# (S_r coefficients over [A00,A01,A10,A11], T_r over [B00,B01,B10,B11])
+_S = (
+    (1, 0, 0, 1),   # S1 = A00 + A11
+    (0, 0, 1, 1),   # S2 = A10 + A11
+    (1, 0, 0, 0),   # S3 = A00
+    (0, 0, 0, 1),   # S4 = A11
+    (1, 1, 0, 0),   # S5 = A00 + A01
+    (-1, 0, 1, 0),  # S6 = A10 - A00
+    (0, 1, 0, -1),  # S7 = A01 - A11
+)
+_T = (
+    (1, 0, 0, 1),   # T1 = B00 + B11
+    (1, 0, 0, 0),   # T2 = B00
+    (0, 1, 0, -1),  # T3 = B01 - B11
+    (-1, 0, 1, 0),  # T4 = B10 - B00
+    (0, 0, 0, 1),   # T5 = B11
+    (1, 1, 0, 0),   # T6 = B00 + B01
+    (0, 0, 1, 1),   # T7 = B10 + B11
+)
+# C quadrants over [M1..M7]
+_C = (
+    (1, 0, 0, 1, -1, 0, 1),   # C00 = M1 + M4 - M5 + M7
+    (0, 0, 1, 0, 1, 0, 0),    # C01 = M3 + M5
+    (0, 1, 0, 1, 0, 0, 0),    # C10 = M2 + M4
+    (1, -1, 1, 0, 0, 1, 0),   # C11 = M1 - M2 + M3 + M6
+)
+
+
+def _quads(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    n, m = x.shape
+    h, w = n // 2, m // 2
+    return x[:h, :w], x[:h, w:], x[h:, :w], x[h:, w:]
+
+
+def _comb(quads, coeffs):
+    out = None
+    for c, q in zip(coeffs, quads):
+        if c == 0:
+            continue
+        term = q if c == 1 else -q if c == -1 else c * q
+        out = term if out is None else out + term
+    return out
+
+
+def strassen(a: jax.Array, b: jax.Array, depth: int = 1) -> jax.Array:
+    """Strassen matmul with ``depth`` levels of 7-way recursion.
+
+    Requires both dims divisible by 2**depth. depth=0 => classic a @ b.
+    """
+    if depth == 0:
+        return a @ b
+    n, k = a.shape
+    _, m = b.shape
+    assert n % 2 == 0 and k % 2 == 0 and m % 2 == 0, (a.shape, b.shape)
+    aq = _quads(a)
+    bq = _quads(b)
+    ms = []
+    for r in range(7):
+        s_r = _comb(aq, _S[r])
+        t_r = _comb(bq, _T[r])
+        ms.append(strassen(s_r, t_r, depth - 1))
+    c00 = _comb(ms, _C[0])
+    c01 = _comb(ms, _C[1])
+    c10 = _comb(ms, _C[2])
+    c11 = _comb(ms, _C[3])
+    return jnp.concatenate(
+        [jnp.concatenate([c00, c01], axis=1),
+         jnp.concatenate([c10, c11], axis=1)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# PACO partitioning of the 7-ary tree
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StrassenNode:
+    """A multiplication node: path of branch indices from the root."""
+
+    path: tuple[int, ...]
+    size: int  # matrix dimension at this node
+
+    def children(self) -> list["StrassenNode"]:
+        return [StrassenNode(self.path + (r,), self.size // 2)
+                for r in range(7)]
+
+
+def plan_strassen(n: int, p: int, *, base: int = 64,
+                  gamma: int | None = None
+                  ) -> paco_tree.Assignment[StrassenNode]:
+    """Pruned BFS of the 7-ary Strassen tree for p processors.
+
+    Returns the per-processor multiplication lists; Theorem 13 invariants
+    (geometric decrease in volume n^omega0 and surface n^2) are property-
+    tested in tests/test_strassen.py.
+    """
+    root = StrassenNode((), n)
+    return paco_tree.pruned_bfs(
+        [root],
+        children=lambda nd: nd.children(),
+        is_base=lambda nd: nd.size <= base,
+        p=p,
+        arity=7,
+        gamma=gamma,
+    )
+
+
+def _leaf_operands(a: jax.Array, b: jax.Array, path: Sequence[int]
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Materialize (S_path, T_path) — the operands of one tree node."""
+    for r in path:
+        aq = _quads(a)
+        bq = _quads(b)
+        a = _comb(aq, _S[r])
+        b = _comb(bq, _T[r])
+    return a, b
+
+
+def _combine(ms: list[jax.Array]) -> jax.Array:
+    c00 = _comb(ms, _C[0])
+    c01 = _comb(ms, _C[1])
+    c10 = _comb(ms, _C[2])
+    c11 = _comb(ms, _C[3])
+    return jnp.concatenate(
+        [jnp.concatenate([c00, c01], axis=1),
+         jnp.concatenate([c10, c11], axis=1)], axis=0)
+
+
+def paco_strassen(a: jax.Array, b: jax.Array, p: int, *, depth: int = 1,
+                  gamma: int | None = None) -> jax.Array:
+    """PACO Strassen: expand exactly ``depth`` levels of the 7-ary tree,
+    assign the 7**depth multiplications by pruned BFS round-robin over p
+    processors, execute each processor's list, and combine bottom-up.
+
+    Execution here is plan-faithful simulation (each leaf computed once,
+    grouped by owner) — numerics identical to ``strassen(a, b, depth)``.
+    """
+    n = a.shape[0]
+    # Plan over the fixed-depth tree: base size = n >> depth.
+    assign = plan_strassen(n, p, base=max(1, n >> depth), gamma=gamma)
+    # leaf results keyed by path
+    leaf: dict[tuple[int, ...], jax.Array] = {}
+    for proc_nodes in assign.by_proc:
+        for node in proc_nodes:
+            la, lb = _leaf_operands(a, b, node.path)
+            leaf[node.path] = la @ lb  # sequential CO-MM base case
+    # Combine bottom-up, deepest first.
+    for d in range(depth - 1, -1, -1):
+        paths = sorted({pth for pth in leaf if len(pth) == d + 1})
+        parents = sorted({pth[:-1] for pth in paths})
+        for par in parents:
+            ms = [leaf.pop(par + (r,)) for r in range(7)]
+            leaf[par] = _combine(ms)
+    return leaf[()]
+
+
+def strassen_beneficial_depth(n: int, *, mxu_flops: float = 197e12,
+                              vpu_flops: float = 3.9e12) -> int:
+    """Cost-model gate: depth d is beneficial iff the matmul flops saved
+    ((7/8)^d) outweigh the extra O(4^d * 18 * (n/2^d)^2) VPU adds at the
+    TPU's MXU:VPU throughput ratio.  Returns the largest beneficial depth
+    (0 when classic matmul wins, the common case on MXU)."""
+    best, best_cost = 0, float("inf")
+    for d in range(0, 6):
+        mm = 2.0 * n ** 3 * (7.0 / 8.0) ** d / mxu_flops
+        adds = 18.0 * n ** 2 * sum((7.0 / 4.0) ** i for i in range(d)) \
+            / vpu_flops
+        cost = mm + adds
+        if cost < best_cost:
+            best, best_cost = d, cost
+    return best

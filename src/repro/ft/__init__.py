@@ -1,0 +1,7 @@
+from repro.ft.elastic import ElasticRunner, make_mesh_for, replan_report
+from repro.ft.straggler import (ThroughputTracker, hetero_tp_plan,
+                                rebalance_batch, straggler_speedup)
+
+__all__ = ["ElasticRunner", "make_mesh_for", "replan_report",
+           "ThroughputTracker", "hetero_tp_plan", "rebalance_batch",
+           "straggler_speedup"]

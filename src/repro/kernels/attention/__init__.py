@@ -1,0 +1,5 @@
+from repro.kernels.attention.attention import flash_attention_pallas
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+
+__all__ = ["flash_attention_pallas", "flash_attention", "attention_ref"]

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for flash attention (model-layout adapter).
+
+Models use (B, S, H, D) layout; the kernel uses (B, H, S, D).  On real TPU
+``use_kernel=True`` swaps the Pallas kernel in; on CPU the chunked-jnp
+formulation in repro.models.layers.attention is the production lowering.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attention.attention import flash_attention_pallas
+from repro.kernels.attention.ref import attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    logit_cap: float | None = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, S, Hq, D), k/v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                               logit_cap=logit_cap, bq=bq, bk=bk,
+                               interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,5 @@
+from repro.kernels.lcs.lcs import lcs_tile_pallas
+from repro.kernels.lcs.ops import lcs_pallas
+from repro.kernels.lcs.ref import lcs_tile_ref
+
+__all__ = ["lcs_tile_pallas", "lcs_pallas", "lcs_tile_ref"]

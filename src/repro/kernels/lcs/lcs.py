@@ -1,0 +1,69 @@
+"""Anti-diagonal wavefront LCS tile kernel (the per-tile sequential base
+case of PACO LCS, paper Sect. III-B / Lemma 1, adapted to VMEM tiling).
+
+Computes the LCS DP over an (M, N) tile given its top/left borders and
+corner.  Inside the kernel a fori_loop sweeps rows; each row update is the
+monotone running-max formulation (X[i,:] = cummax(max(top, diag+eq)) lower-
+bounded by the left border), vectorized along the row — the VPU-friendly
+wavefront of DESIGN.md §2.4.  Outputs the bottom border row and right
+border column, which is all downstream tiles need (surface, not volume —
+the communication term of the paper's analysis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lcs_kernel(s_ref, t_ref, top_ref, left_ref, corner_ref,
+                bottom_ref, right_ref):
+    t_row = t_ref[...]                       # (N,)
+    n = t_row.shape[0]
+    m = s_ref.shape[0]
+
+    def row_step(i, carry):
+        prev, prev_corner, right = carry      # prev: X[i-1, :], (N,)
+        si = s_ref[i]
+        li = left_ref[i]                      # X[i, -1]
+        eq = (t_row == si).astype(jnp.int32)
+        diag = jnp.concatenate([prev_corner[None], prev[:-1]])
+        a = jnp.maximum(prev, diag + eq)
+        cur = jax.lax.associative_scan(jnp.maximum, a)
+        cur = jnp.maximum(cur, li)            # left border lower-bounds row
+        right = right.at[i].set(cur[-1])
+        return cur, li, right
+
+    init = (top_ref[...], corner_ref[0], jnp.zeros((m,), jnp.int32))
+    bottom, _, right = jax.lax.fori_loop(0, m, row_step, init)
+    bottom_ref[...] = bottom
+    right_ref[...] = right
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lcs_tile_pallas(s_tile: jax.Array, t_tile: jax.Array, top: jax.Array,
+                    left: jax.Array, corner: jax.Array, *,
+                    interpret: bool = True
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One (M, N) LCS tile.  s_tile (M,), t_tile (N,) int32 sequences;
+    top (N,), left (M,), corner (1,) int32 DP borders.
+    Returns (bottom_row (N,), right_col (M,))."""
+    m, n = s_tile.shape[0], t_tile.shape[0]
+    return pl.pallas_call(
+        _lcs_kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((m,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((m,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((n,), lambda: (0,)),
+                   pl.BlockSpec((m,), lambda: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((m,), jnp.int32)],
+        interpret=interpret,
+    )(s_tile, t_tile, top, left, corner)

@@ -1,0 +1,36 @@
+"""Public wrapper: full LCS via the Pallas tile kernel over a PACO tiling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lcs.lcs import lcs_tile_pallas
+
+
+def lcs_pallas(s: jax.Array, t: jax.Array, p: int, *, tile: int | None = None,
+               interpret: bool = True) -> jax.Array:
+    """LCS length using the wavefront tile kernel (PACO tiling for p procs)."""
+    m, n = s.shape[0], t.shape[0]
+    if tile is None:
+        tile = max(1, m >> max(1, (p - 1).bit_length()))
+    assert m % tile == 0 and n % tile == 0
+    ti, tj = m // tile, n // tile
+    bottoms, rights, corners = {}, {}, {}
+    zrow = jnp.zeros((tile,), jnp.int32)
+    zero = jnp.zeros((1,), jnp.int32)
+    res = zero
+    for d in range(ti + tj - 1):
+        for i in range(max(0, d - tj + 1), min(ti, d + 1)):
+            j = d - i
+            top = bottoms.get((i - 1, j), zrow)
+            left = rights.get((i, j - 1), zrow)
+            corner = corners.get((i - 1, j - 1), zero)
+            b, r = lcs_tile_pallas(
+                s[i * tile:(i + 1) * tile], t[j * tile:(j + 1) * tile],
+                top, left, corner, interpret=interpret)
+            bottoms[(i, j)] = b
+            rights[(i, j)] = r
+            corners[(i, j)] = b[-1:]
+            if i == ti - 1 and j == tj - 1:
+                res = b[-1:]
+    return res[0]

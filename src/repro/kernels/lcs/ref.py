@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the LCS tile kernel (mirrors core.lcs.lcs_tile)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lcs_tile_ref(s_tile: jax.Array, t_tile: jax.Array, top: jax.Array,
+                 left: jax.Array, corner: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    def row(carry, inp):
+        prev, prev_corner = carry
+        si, li = inp
+        eq = (t_tile == si).astype(prev.dtype)
+        diag = jnp.concatenate([prev_corner[None], prev[:-1]])
+        a = jnp.maximum(prev, diag + eq)
+        cur = jax.lax.cummax(a)
+        cur = jnp.maximum(cur, li)
+        return (cur, li), cur[-1]
+
+    (bottom, _), right = jax.lax.scan(row, (top, corner[0]), (s_tile, left))
+    return bottom, right

@@ -1,0 +1,5 @@
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+__all__ = ["matmul_pallas", "matmul", "matmul_ref"]

@@ -1,0 +1,60 @@
+"""Blocked MXU matmul Pallas kernel — the TPU realization of the paper's
+sequential cache-oblivious base case (DESIGN.md §7.1: the ideal-cache
+recursion becomes an explicit VMEM tiling with MXU-aligned blocks).
+
+Grid (n/bn, m/bm, k/bk); each program multiplies an (bn, bk) x (bk, bm)
+tile pair in VMEM and accumulates into an fp32 VMEM scratch across the k
+loop (innermost grid axis => sequential on TPU), flushing once — the
+cache-oblivious recursion's "top-level node dominates" property, hard-coded
+as a tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bk", "interpret"))
+def matmul_pallas(a: jax.Array, b: jax.Array, *, bn: int = 128,
+                  bm: int = 128, bk: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """C = A @ B with explicit (bn, bm, bk) VMEM blocking.
+
+    Block sizes must divide the operand shapes and should be multiples of
+    128 on real TPU (MXU alignment); tests sweep smaller blocks in
+    interpret mode.
+    """
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2
+    assert n % bn == 0 and m % bm == 0 and k % bk == 0, (a.shape, b.shape)
+    grid = (n // bn, m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bm), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

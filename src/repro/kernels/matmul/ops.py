@@ -1,0 +1,25 @@
+"""jit'd public wrapper: picks PACO-aligned block sizes and falls back to
+XLA dot on shapes the kernel does not cover (non-divisible blocks)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def _pick_block(dim: int, target: int = 128) -> int:
+    for b in (target, 64, 32, 16, 8):
+        if dim % b == 0:
+            return b
+    return 0
+
+
+def matmul(a: jax.Array, b: jax.Array, *, interpret: bool = False
+           ) -> jax.Array:
+    n, k = a.shape
+    _, m = b.shape
+    bn, bm, bk = _pick_block(n), _pick_block(m), _pick_block(k)
+    if not (bn and bm and bk):
+        return matmul_ref(a, b)
+    return matmul_pallas(a, b, bn=bn, bm=bm, bk=bk, interpret=interpret)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds abstract params / optimizer state / inputs (ShapeDtypeStruct —
+     no allocation),
+  3. jit-lowers the train/prefill/serve step with PACO-planned shardings,
+  4. compiles, records memory_analysis() + cost_analysis() + the collective
+     schedule parsed from the optimized HLO,
+  5. writes experiments/dryrun/<mesh>_<arch>_<shape>.json for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+import argparse       # noqa: E402
+import json           # noqa: E402
+import re             # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+import numpy as np    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_arch  # noqa: E402
+from repro.dist.sharding import (batch_specs, cache_specs, dp_axes,  # noqa: E402
+                                 param_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (input_specs, opt_state_shapes,  # noqa: E402
+                                param_shapes, step_fn_for)
+from repro.train.train_step import TrainConfig  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9e]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str) -> dict:
+    """Sum output-shape bytes per collective kind (per-device convention:
+    the partitioned HLO's shapes are per-device)."""
+    out: dict[str, dict] = {}
+    for type_str, kind in _COLL_RE.findall(hlo):
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += _shape_bytes(type_str)
+    return out
+
+
+def shardings_for(cfg, shape, mesh, abstract):
+    """NamedSharding pytrees matching the abstract args of the step fn."""
+    named = lambda spec: NamedSharding(mesh, spec)  # noqa: E731
+    pspecs = jax.tree.map(named, param_specs(cfg, abstract["params"], mesh),
+                          is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "train":
+        ospecs = {
+            "opt": {
+                "m": pspecs, "v": pspecs,
+                "step": named(P()),
+            },
+        }
+        bspecs = jax.tree.map(
+            named, batch_specs(cfg, mesh, abstract["batch"]))
+        bspecs = {k: bspecs[k] for k in abstract["batch"]}
+        return (pspecs, ospecs, bspecs)
+    if shape.kind == "prefill":
+        bspecs = jax.tree.map(
+            named, batch_specs(cfg, mesh, abstract["batch"]))
+        return (pspecs, bspecs)
+    dp = dp_axes(mesh)
+    b = abstract["tokens"].shape[0]
+    dp_size = np.prod([mesh.shape[a] for a in
+                       (dp if isinstance(dp, tuple) else (dp,))])
+    tok_spec = named(P("data", None)) if b % mesh.shape["data"] == 0 \
+        else named(P(None, None))
+    len_spec = named(P("data")) if b % mesh.shape["data"] == 0 \
+        else named(P(None))
+    cspecs = jax.tree.map(named, cache_specs(cfg, mesh, abstract["cache"]),
+                          is_leaf=lambda x: isinstance(x, P))
+    return (pspecs, tok_spec, cspecs, len_spec)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             *, tcfg: TrainConfig | None = None, tag: str = "") -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "status": "skipped"}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec["why"] = why
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    abstract: dict = {"params": param_shapes(cfg)}
+    abstract.update(input_specs(cfg, shape))
+    tcfg = tcfg or TrainConfig()
+    fn, fn_name = step_fn_for(cfg, shape, tcfg)
+    if shape.kind == "train":
+        abstract["state"] = opt_state_shapes(cfg, tcfg, abstract["params"])
+        args = (abstract["params"], abstract["state"], abstract["batch"])
+        in_sh = shardings_for(cfg, shape, mesh, abstract)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        args = (abstract["params"], abstract["batch"])
+        in_sh = shardings_for(cfg, shape, mesh, abstract)
+        donate = ()
+    else:
+        args = (abstract["params"], abstract["tokens"], abstract["cache"],
+                abstract["lengths"])
+        in_sh = shardings_for(cfg, shape, mesh, abstract)
+        donate = (2,)
+    rec.update(fn=fn_name, devices=int(np.prod(list(mesh.shape.values()))))
+    from repro.dist.act_sharding import use_mesh_rules
+    try:
+        with use_mesh_rules(mesh):
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        if not isinstance(ca, dict):
+            ca = ca[0]
+        hlo = compiled.as_text()
+        rec.update(
+            status="ok", lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_per_device":
+                    ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                    + ma.output_size_in_bytes - ma.alias_size_in_bytes,
+            },
+            cost={
+                "flops_per_device": ca.get("flops", 0.0),
+                "bytes_per_device": ca.get("bytes accessed", 0.0),
+            },
+            collectives=collective_stats(hlo),
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{mesh_name}_{arch}_{shape_name}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_bad = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "multi" if multi else "single"
+                path = os.path.join(
+                    args.out, f"{mesh_name}_{arch}_{shape}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            continue
+                rec = run_cell(arch, shape, multi, args.out)
+                n_bad += rec["status"] == "error"
+                msg = rec.get("error", rec.get("why", ""))
+                extra = ""
+                if rec["status"] == "ok":
+                    gb = rec["memory"]["peak_bytes_per_device"] / 2 ** 30
+                    extra = (f"peak {gb:.2f} GiB/dev "
+                             f"compile {rec['compile_s']:.0f}s")
+                print(f"[{rec['status']:7s}] {mesh_name:6s} {arch:22s} "
+                      f"{shape:12s} {extra}{msg}", flush=True)
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

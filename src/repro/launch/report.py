@@ -1,0 +1,102 @@
+"""Render EXPERIMENTS.md tables from experiments/{dryrun,roofline} records.
+
+  PYTHONPATH=src python -m repro.launch.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+DRYRUN = "experiments/dryrun"
+ROOF = "experiments/roofline"
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def gib(x):
+    return f"{x / 2 ** 30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | fn | peak GiB/dev | args GiB | HLO collectives "
+            "(count / GiB per dev) | compile s |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in sorted(ARCHS):
+        for shape in SHAPES:
+            r = _load(f"{DRYRUN}/{mesh}_{arch}_{shape}.json")
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | — | — | — | skipped: "
+                            f"{r.get('why', '')[:40]} | — |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {arch} | {shape} | {r.get('fn')} | ERROR | "
+                            f"| {r.get('error', '')[:40]} | |")
+                continue
+            m = r["memory"]
+            colls = r.get("collectives", {})
+            cs = " ".join(
+                f"{k.replace('collective-', 'c-')}:{v['count']}/"
+                f"{gib(v['bytes'])}" for k, v in sorted(colls.items()))
+            rows.append(
+                f"| {arch} | {shape} | {r['fn']} | "
+                f"{gib(m['peak_bytes_per_device'])} | "
+                f"{gib(m['argument_bytes'])} | {cs} | {r['compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "mem s (TPU-proj) | dominant | MODEL_FLOPS/HLO | roofline frac "
+            "| frac (TPU-proj) |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in sorted(ARCHS):
+        for shape in SHAPES:
+            r = _load(f"{ROOF}/{arch}_{shape}.json")
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | — | — | — | — | skipped "
+                            f"| — | — | — |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {arch} | {shape} | ERR | | | | "
+                            f"{r.get('error', '')[:40]} | | | |")
+                continue
+            s = r["seconds"]
+            dom = r["dominant"]
+            mp = r.get("memory_s_tpu_projected", 0)
+            fp = r.get("roofline_fraction_tpu_projected", 0)
+            # records from before the share-based projection fix clamp at 0
+            mp_s = f"{mp:.3f}" if mp > 0 else "n/a"
+            fp_s = f"{fp:.3f}" if mp > 0 else "n/a"
+            rows.append(
+                f"| {arch} | {shape} | {s['compute']:.3f} | "
+                f"{s['memory']:.3f} | {s['collective']:.3f} | "
+                f"{mp_s} | {dom} | "
+                f"{r.get('useful_flops_ratio', 0):.2f} | "
+                f"{r.get('roofline_fraction', 0):.3f} | "
+                f"{fp_s} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    print("## Dry-run — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## Dry-run — multi pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## Roofline — single pod, per (arch x shape)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (deliverable g).
+
+Per (arch x shape) on the single-pod mesh, derive the three roofline terms:
+
+    compute    = HLO_FLOPs_per_chip / 197e12           (bf16 MXU peak)
+    memory     = HLO_bytes_per_chip / 819e9             (HBM bandwidth)
+    collective = collective_bytes_per_chip / 50e9       (one ICI link)
+
+``cost_analysis`` counts a lax.scan body ONCE regardless of trip count
+(verified empirically), so this driver lowers each cell twice with the
+layer/attention/MoE scans UNROLLED at two reduced depths L1 < L2, fits
+flops(L) = a + b*L (exactly linear — every scanned quantity is per-layer),
+and extrapolates to the full depth.  Bytes and per-kind collective bytes
+get the same treatment.  The full-depth *memory* numbers come from the
+scanned dry-run records (experiments/dryrun), which are exact.
+
+MODEL_FLOPS (the "useful flops" numerator for the utilization ratio):
+    train:    6 * N_active * tokens  (fwd 2x + bwd 4x)
+    prefill:  2 * N_active * tokens
+    decode:   2 * N_active * batch   (+ cache read dominates bytes)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --arch all --shape all \
+      --out experiments/roofline
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import math          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_arch  # noqa: E402
+from repro.dist.act_sharding import use_mesh_rules  # noqa: E402
+from repro.launch.dryrun import collective_stats, shardings_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (input_specs, opt_state_shapes,  # noqa: E402
+                                param_shapes, step_fn_for)
+from repro.models import flags  # noqa: E402
+from repro.models.model import active_param_count, init_params  # noqa: E402
+from repro.train.train_step import TrainConfig  # noqa: E402
+
+PEAK_FLOPS = 197e12   # bf16 / chip (v5e-class)
+HBM_BW = 819e9        # B/s / chip
+ICI_BW = 50e9         # B/s / link
+
+
+def _reduced_depths(cfg) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every
+    return 1, 2
+
+
+def _with_depth(cfg, layers: int):
+    kw = {"n_layers": layers}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = layers
+    return dataclasses.replace(cfg, **kw)
+
+
+_SHAPE_RE2 = __import__("re").compile(r"= (f32|bf16)\[([0-9,]+)\]\S* (\w+)\(")
+
+
+def _aux_bytes(hlo: str, seq_len: int) -> dict:
+    """Two artifact-level corrections (documented in EXPERIMENTS.md §Roofline):
+
+    * convert_bytes — total bytes of convert ops.  XLA:CPU legalizes bf16
+      arithmetic as convert->f32->convert, so the raw 'bytes accessed'
+      counts f32-width copies of all bf16 traffic; convert share bounds
+      that inflation (native-bf16 TPU does not pay it).
+    * score_bytes — f32 tensors whose trailing dim == seq_len with ndim>=3
+      (the attention score chain).  The Pallas flash kernel
+      (repro.kernels.attention) keeps this chain in VMEM on TPU; the
+      projected memory term subtracts 90% of it.
+    """
+    conv = 0
+    score = 0
+    total = 0
+    for m in _SHAPE_RE2.finditer(hlo):
+        dt, dims, op = m.groups()
+        shape = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in shape:
+            n *= d
+        b = n * (4 if dt == "f32" else 2)
+        total += b
+        if op == "convert":
+            conv += b
+        if (dt == "f32" and len(shape) >= 3 and shape[-1] == seq_len):
+            score += b
+    # NOTE: this parse includes fusion-internal ops, so conv/score/total
+    # all overcount relative to cost_analysis' fusion-level bytes; the
+    # projection therefore uses *shares* (same bias in numerator and
+    # denominator) applied to the cost_analysis number.
+    return {"convert_bytes": float(conv), "score_bytes": float(score),
+            "parsed_total_bytes": float(max(total, 1))}
+
+
+def _measure(cfg, shape, mesh) -> dict:
+    """Compile one (possibly depth-reduced, unrolled) cell; return raw
+    per-device flops/bytes/collectives."""
+    abstract = {"params": param_shapes(cfg)}
+    abstract.update(input_specs(cfg, shape))
+    tcfg = TrainConfig()
+    fn, _ = step_fn_for(cfg, shape, tcfg)
+    if shape.kind == "train":
+        abstract["state"] = opt_state_shapes(cfg, tcfg, abstract["params"])
+        args = (abstract["params"], abstract["state"], abstract["batch"])
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        args = (abstract["params"], abstract["batch"])
+        donate = ()
+    else:
+        args = (abstract["params"], abstract["tokens"], abstract["cache"],
+                abstract["lengths"])
+        donate = (2,)
+    in_sh = shardings_for(cfg, shape, mesh, abstract)
+    with use_mesh_rules(mesh):
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if not isinstance(ca, dict):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+    aux = _aux_bytes(hlo, shape.seq_len)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(sum(v["bytes"] for v in colls.values())),
+        "colls": colls,
+        "convert_bytes": aux["convert_bytes"],
+        "score_bytes": aux["score_bytes"],
+        "parsed_total_bytes": aux["parsed_total_bytes"],
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful-flops (global, all chips)."""
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    n_active = active_param_count(cfg, params)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * b * s
+    if shape.kind == "prefill":
+        return 2.0 * n_active * b * s
+    return 2.0 * n_active * b  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, out_dir: str,
+             dryrun_dir: str = "experiments/dryrun") -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "status": "skipped"}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec["why"] = why
+        return rec
+    mesh = make_production_mesh()  # single pod: 256 chips
+    chips = 256
+    l1, l2 = _reduced_depths(cfg)
+    full_l = cfg.n_layers
+    try:
+        t0 = time.time()
+        flags.set_unroll(True)
+        m1 = _measure(_with_depth(cfg, l1), shape, mesh)
+        m2 = _measure(_with_depth(cfg, l2), shape, mesh)
+        flags.set_unroll(False)
+
+        def fit(key):
+            slope = (m2[key] - m1[key]) / (l2 - l1)
+            const = m1[key] - slope * l1
+            return const + slope * full_l
+
+        flops = fit("flops")
+        byts = fit("bytes")
+        coll = fit("coll_bytes")
+        conv_b = fit("convert_bytes")
+        score_b = fit("score_bytes")
+        parsed_b = max(fit("parsed_total_bytes"), 1.0)
+        mf = model_flops(cfg, shape)
+        compute_t = flops / PEAK_FLOPS
+        memory_t = byts / HBM_BW
+        coll_t = coll / ICI_BW
+        # TPU-projected memory term: drop the CPU bf16-legalization convert
+        # share and 90% of the attention-score-chain share (kept in VMEM by
+        # the Pallas flash kernel on real hardware).  Shares come from the
+        # same (fusion-inclusive) parse for numerator and denominator.
+        conv_share = min(conv_b / parsed_b, 0.9)
+        score_share = min(score_b / parsed_b, 0.9)
+        proj_factor = max(0.05, 1.0 - conv_share - 0.9 * score_share)
+        memory_t_proj = byts * proj_factor / HBM_BW
+        dominant = max(
+            [("compute", compute_t), ("memory", memory_t),
+             ("collective", coll_t)], key=lambda kv: kv[1])[0]
+        # Roofline fraction: the IDEAL step time (useful flops at peak MXU,
+        # or the irreducible working set — params/opt/cache, i.e. the
+        # compiled argument+output bytes — streamed once at HBM peak,
+        # whichever is larger) over the modelled bound.  Compute-bound
+        # cells score flops utilization; decode cells score cache-read
+        # efficiency.
+        useful_bytes = 0.0
+        dr = os.path.join(dryrun_dir, f"single_{arch}_{shape_name}.json")
+        if os.path.exists(dr):
+            with open(dr) as f:
+                drm = json.load(f).get("memory", {})
+            useful_bytes = (drm.get("argument_bytes", 0)
+                            + drm.get("output_bytes", 0))
+        t_bound = max(compute_t, memory_t, coll_t)
+        ideal_t = max(mf / chips / PEAK_FLOPS, useful_bytes / HBM_BW)
+        frac = ideal_t / t_bound if t_bound else 0.0
+        frac_proj = (ideal_t / max(compute_t, memory_t_proj, coll_t)
+                     if t_bound else 0.0)
+        dominant_proj = max(
+            [("compute", compute_t), ("memory", memory_t_proj),
+             ("collective", coll_t)], key=lambda kv: kv[1])[0]
+        t_bound_proj = max(compute_t, memory_t_proj, coll_t)
+        rec.update(
+            status="ok",
+            seconds={"compute": compute_t, "memory": memory_t,
+                     "collective": coll_t},
+            memory_s_tpu_projected=memory_t_proj,
+            convert_bytes_per_chip=conv_b,
+            score_bytes_per_chip=score_b,
+            dominant_tpu_projected=dominant_proj,
+            dominant=dominant,
+            flops_per_chip=flops,
+            bytes_per_chip=byts,
+            coll_bytes_per_chip=coll,
+            model_flops_total=mf,
+            model_flops_per_chip=mf / chips,
+            useful_flops_ratio=(mf / chips) / flops if flops else 0.0,
+            useful_bytes_per_chip=useful_bytes,
+            roofline_fraction=frac,
+            roofline_fraction_tpu_projected=frac_proj,
+            fit={"l1": l1, "l2": l2,
+                 "flops_l1": m1["flops"], "flops_l2": m2["flops"]},
+            colls_l2=m2["colls"],
+            wall_s=round(time.time() - t0, 1),
+        )
+        # pull the exact full-depth memory numbers from the dry-run record
+        dr = os.path.join(dryrun_dir, f"single_{arch}_{shape_name}.json")
+        if os.path.exists(dr):
+            with open(dr) as f:
+                rec["dryrun_memory"] = json.load(f).get("memory")
+    except Exception as e:
+        flags.set_unroll(False)
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-1500:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}_{shape_name}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="experiments/roofline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    for arch in archs:
+        for shape in shapes:
+            path = os.path.join(args.out, f"{arch}_{shape}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        continue
+            rec = run_cell(arch, shape, args.out)
+            if rec["status"] == "ok":
+                s = rec["seconds"]
+                print(f"[ok     ] {arch:22s} {shape:12s} "
+                      f"comp {s['compute'] * 1e3:8.2f}ms "
+                      f"mem {s['memory'] * 1e3:8.2f}ms "
+                      f"coll {s['collective'] * 1e3:8.2f}ms "
+                      f"dom={rec['dominant']:10s} "
+                      f"frac={rec['roofline_fraction']:.3f}", flush=True)
+            else:
+                print(f"[{rec['status']:7s}] {arch:22s} {shape:12s} "
+                      f"{rec.get('error', rec.get('why', ''))}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+Nothing here allocates: params come from jax.eval_shape over init, inputs
+are ShapeDtypeStructs, and the modality frontends are stubs (precomputed
+frame/patch embeddings for [audio]/[vlm] archs per the assignment)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import cache_spec, decode_step, forward, prefill
+from repro.models.model import init_params
+from repro.optim import AdamWConfig
+from repro.train.train_step import TrainConfig, init_train_state, train_step
+
+
+def param_shapes(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_state_shapes(cfg: ArchConfig, tcfg: TrainConfig, params: Any) -> Any:
+    return jax.eval_shape(lambda: init_train_state(cfg, tcfg, jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), params)))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> dict:
+    """Batch / serving input ShapeDtypeStructs for one shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["src_emb"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    cfg.dtype)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["src_emb"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    cfg.dtype)
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": cache_spec(cfg, b, s, src_len=s),
+        "lengths": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def step_fn_for(cfg: ArchConfig, shape: ShapeCell,
+                tcfg: TrainConfig | None = None) -> tuple[Callable, str]:
+    """(fn, name) to lower for this cell.  train -> train_step;
+    prefill -> prefill (forward for SSM/hybrid, whose chunked-SSD forward
+    *is* the prefill compute); decode -> decode_step (serve_step)."""
+    tcfg = tcfg or TrainConfig(opt=AdamWConfig())
+    if shape.kind == "train":
+
+        def train_fn(params, state, batch):
+            return train_step(params, state, batch, cfg=cfg, tcfg=tcfg)
+
+        return train_fn, "train_step"
+    if shape.kind == "prefill":
+        if cfg.family in ("ssm", "hybrid"):
+            def fwd_fn(params, batch):
+                return forward(params, cfg, batch, remat=False)
+            return fwd_fn, "prefill(forward)"
+
+        def prefill_fn(params, batch):
+            return prefill(params, cfg, batch, max_seq=shape.seq_len)
+
+        return prefill_fn, "prefill"
+
+    def serve_fn(params, tokens, cache, lengths):
+        return decode_step(params, cfg, tokens, cache, lengths)
+
+    return serve_fn, "serve_step"

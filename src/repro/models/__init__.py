@@ -1,0 +1,9 @@
+from repro.models.model import (
+    init_params, forward, loss_fn, cache_spec, init_cache, decode_step,
+    prefill, param_count, active_param_count,
+)
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "cache_spec", "init_cache",
+    "decode_step", "prefill", "param_count", "active_param_count",
+]

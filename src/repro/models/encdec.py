@@ -1,0 +1,189 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+*precomputed frame embeddings* (B, S_src, d_model) — input_specs() provides
+them — while the decoder consumes target tokens.  Cross-attention K/V are
+computed once from encoder output and cached for decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import act_sharding as act
+from repro.models import flags
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def _init_xattn(key, cfg: ArchConfig, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dh = cfg.head_dim
+    return {
+        "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * dh, dtype),
+        "wk": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wv": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wo": L.dense_init(ko, cfg.n_heads * dh, cfg.d_model, dtype),
+    }
+
+
+def init_encdec(cfg: ArchConfig, key) -> Params:
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 6)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": L.init_gqa(k1, cfg, dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": L.init_mlp(k2, cfg, cfg.d_ff, dtype)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": L.init_gqa(k1, cfg, dtype),
+                "lnx": jnp.zeros((cfg.d_model,), dtype),
+                "xattn": _init_xattn(k2, cfg, dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": L.init_mlp(k3, cfg, cfg.d_ff, dtype)}
+
+    enc = [enc_block(k) for k in jax.random.split(ks[0], cfg.n_enc_layers)]
+    dec = [dec_block(k) for k in jax.random.split(ks[1], cfg.n_layers)]
+    return {
+        "embed": (jax.random.normal(ks[2], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32)
+                  / math.sqrt(cfg.d_model)).astype(dtype),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[3], cfg.d_model,
+                                cfg.padded_vocab, dtype),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, src_emb: jax.Array,
+           *, remat: bool = True) -> jax.Array:
+    """src_emb: (B, S_src, d_model) precomputed frames -> encoder states."""
+    s = src_emb.shape[1]
+    positions = jnp.arange(s)
+
+    def body(x, blk):
+        x = act.residual(x)
+        h = L.rms_norm(x, blk["ln1"])
+        a = L.apply_gqa(blk["attn"], cfg, h, positions, causal=False)
+        x = x + a
+        h = L.rms_norm(x, blk["ln2"])
+        return act.residual(x + L.apply_mlp(blk["mlp"], cfg, h)), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, act.batch_seq(src_emb), params["enc_blocks"],
+                        unroll=flags.scan_unroll(cfg.n_enc_layers))
+    return L.rms_norm(x, params["enc_norm"])
+
+
+def _cross_attention(p: Params, cfg: ArchConfig, h: jax.Array,
+                     enc: jax.Array) -> jax.Array:
+    b, s, _ = h.shape
+    dh = cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (enc @ p["wk"]).reshape(b, enc.shape[1], cfg.n_kv_heads, dh)
+    v = (enc @ p["wv"]).reshape(b, enc.shape[1], cfg.n_kv_heads, dh)
+    o = L.attention(q, k, v, q_positions=jnp.arange(s),
+                    k_positions=jnp.arange(enc.shape[1]), causal=False,
+                    q_chunk=cfg.q_chunk)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def forward_encdec(params: Params, cfg: ArchConfig, src_emb: jax.Array,
+                   tgt_tokens: jax.Array, *, remat: bool = True
+                   ) -> jax.Array:
+    """Teacher-forced training forward -> logits (B, S_tgt, V)."""
+    enc = encode(params, cfg, src_emb, remat=remat)
+    b, s = tgt_tokens.shape
+    x = params["embed"][tgt_tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)
+    positions = jnp.arange(s)
+
+    def body(x, blk):
+        x = act.residual(x)
+        h = L.rms_norm(x, blk["ln1"])
+        x = x + L.apply_gqa(blk["attn"], cfg, h, positions, causal=True)
+        h = L.rms_norm(x, blk["lnx"])
+        x = x + _cross_attention(blk["xattn"], cfg, h, enc)
+        h = L.rms_norm(x, blk["ln2"])
+        return act.residual(x + L.apply_mlp(blk["mlp"], cfg, h)), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, act.batch_seq(x), params["dec_blocks"],
+                        unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    return L.mask_vocab(
+        act.constrain((x @ params["lm_head"]).astype(jnp.float32),
+                      "dp", None, "model"), cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def cache_spec_encdec(cfg: ArchConfig, batch: int, max_seq: int,
+                      src_len: int) -> dict:
+    dt = cfg.dtype
+    lyr = cfg.n_layers
+    kv = (lyr, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    xkv = (lyr, batch, src_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(kv, dt),
+            "v": jax.ShapeDtypeStruct(kv, dt),
+            "xk": jax.ShapeDtypeStruct(xkv, dt),
+            "xv": jax.ShapeDtypeStruct(xkv, dt)}
+
+
+def decode_step_encdec(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                       cache: Params, lengths: jax.Array
+                       ) -> tuple[jax.Array, Params, jax.Array]:
+    """One decode step; cross K/V precomputed in cache (xk, xv)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)
+    positions = lengths
+
+    def body(x, inp):
+        blk, cache_l = inp
+        h = L.rms_norm(x, blk["ln1"])
+        q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions[:, None])
+        k_c = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(cache_l["k"], kk, lengths)
+        v_c = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(cache_l["v"], v, lengths)
+        o = L.decode_attention(q, k_c, v_c, lengths=lengths + 1)
+        x = x + o.reshape(b, 1, -1) @ blk["attn"]["wo"]
+        # cross attention against precomputed source K/V
+        h = L.rms_norm(x, blk["lnx"])
+        dh = cfg.head_dim
+        qx = (h @ blk["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, dh)
+        src_len = cache_l["xk"].shape[1]
+        ox = L.decode_attention(
+            qx, cache_l["xk"], cache_l["xv"],
+            lengths=jnp.full((b,), src_len, jnp.int32))
+        x = x + ox.reshape(b, 1, -1) @ blk["xattn"]["wo"]
+        h = L.rms_norm(x, blk["ln2"])
+        x = x + L.apply_mlp(blk["mlp"], cfg, h)
+        return x, {"k": k_c, "v": v_c, "xk": cache_l["xk"],
+                   "xv": cache_l["xv"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache),
+                                unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.mask_vocab((x @ params["lm_head"]).astype(jnp.float32),
+                          cfg.vocab)
+    return logits[:, 0], new_cache, lengths + 1

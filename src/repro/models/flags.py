@@ -1,0 +1,23 @@
+"""Trace-time flags.
+
+``unroll``: when True, model scans (layers, attention chunks) fully unroll.
+Used ONLY by the roofline cost pass — XLA's cost_analysis counts a while
+body once regardless of trip count, so the roofline lowers small-L unrolled
+variants and fits flops(L) = a + b*L (launch/roofline.py)."""
+from __future__ import annotations
+
+_UNROLL = False
+
+
+def set_unroll(v: bool) -> None:
+    global _UNROLL
+    _UNROLL = v
+
+
+def unroll_flag() -> bool:
+    return _UNROLL
+
+
+def scan_unroll(length: int):
+    """Value for lax.scan(unroll=...)."""
+    return length if _UNROLL else 1

@@ -1,0 +1,228 @@
+"""Hybrid SSM + shared-attention backbone (zamba2-7b) and the pure-SSM
+backbone (mamba2-780m).
+
+zamba2: groups of ``attn_every`` Mamba-2 layers followed by a *weight-shared*
+full-attention block (the paper's global shared block).  The mamba stack is
+scanned per group; the shared block re-applies the same weights each time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import act_sharding as act
+from repro.models import flags
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Pure SSM (mamba2)
+# ---------------------------------------------------------------------------
+
+def init_ssm_lm(cfg: ArchConfig, key) -> Params:
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    blocks = [{"ln": jnp.zeros((cfg.d_model,), dtype),
+               "mixer": S.init_mamba2(k, cfg, dtype)}
+              for k in ks[2:]]
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32)
+                  / math.sqrt(cfg.d_model)).astype(dtype),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[1], cfg.d_model, cfg.padded_vocab,
+                                dtype),
+    }
+
+
+def forward_ssm_lm(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+                   remat: bool = True) -> jax.Array:
+    x = params["embed"][tokens]
+
+    def body(x, blk):
+        x = act.residual(x)
+        h = L.rms_norm(x, blk["ln"])
+        return act.residual(x + S.apply_mamba2(blk["mixer"], cfg, h)), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, act.batch_seq(x), params["blocks"],
+                        unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    return L.mask_vocab(
+        act.constrain((x @ params["lm_head"]).astype(jnp.float32),
+                      "dp", None, "model"), cfg.vocab)
+
+
+def state_spec_ssm(cfg: ArchConfig, batch: int) -> dict:
+    conv_s, ssm_s = S.mamba2_state_shapes(cfg, batch)
+    lyr = cfg.n_layers
+    return {
+        "conv": jax.ShapeDtypeStruct((lyr, *conv_s), cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((lyr, *ssm_s), jnp.float32),
+    }
+
+
+def decode_step_ssm(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                    state: Params, lengths: jax.Array
+                    ) -> tuple[jax.Array, Params, jax.Array]:
+    """tokens (B, 1) -> (logits (B, V), new_state, lengths+1)."""
+    x = params["embed"][tokens[:, 0]]  # (B, D)
+
+    def body(x, inp):
+        blk, st = inp
+        h = L.rms_norm(x, blk["ln"])
+        y, conv, ssm_st = S.step_mamba2(blk["mixer"], cfg, h,
+                                        st["conv"], st["ssm"])
+        return x + y, {"conv": conv, "ssm": ssm_st}
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state),
+                                unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.mask_vocab((x @ params["lm_head"]).astype(jnp.float32),
+                          cfg.vocab)
+    return logits, new_state, lengths + 1
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2)
+# ---------------------------------------------------------------------------
+
+def init_hybrid(cfg: ArchConfig, key) -> Params:
+    dtype = cfg.dtype
+    assert cfg.n_layers % cfg.attn_every == 0, \
+        "hybrid requires n_layers % attn_every == 0"
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    blocks = [{"ln": jnp.zeros((cfg.d_model,), dtype),
+               "mixer": S.init_mamba2(k, cfg, dtype)}
+              for k in ks[4:]]
+    n_groups = cfg.n_layers // cfg.attn_every
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    # reshape to (n_groups, attn_every, ...)
+    grouped = jax.tree.map(
+        lambda x: x.reshape(n_groups, cfg.attn_every, *x.shape[1:]),
+        stacked)
+    ka, km = jax.random.split(ks[1])
+    shared = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+              "attn": L.init_gqa(ka, cfg, dtype),
+              "ln2": jnp.zeros((cfg.d_model,), dtype),
+              "mlp": L.init_mlp(km, cfg, cfg.d_ff, dtype)}
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32)
+                  / math.sqrt(cfg.d_model)).astype(dtype),
+        "groups": grouped,
+        "shared_attn": shared,  # ONE set of weights, applied every group
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                dtype),
+    }
+
+
+def forward_hybrid(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+                   remat: bool = True) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+    shared = params["shared_attn"]
+
+    def mamba_body(x, blk):
+        x = act.residual(x)
+        h = L.rms_norm(x, blk["ln"])
+        return act.residual(x + S.apply_mamba2(blk["mixer"], cfg, h)), None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def group_body(x, grp):
+        x, _ = jax.lax.scan(mamba_body, x, grp,
+                            unroll=flags.scan_unroll(cfg.attn_every))
+        # weight-shared global attention block
+        h = L.rms_norm(x, shared["ln1"])
+        x = x + L.apply_gqa(shared["attn"], cfg, h, positions)
+        h = L.rms_norm(x, shared["ln2"])
+        x = x + L.apply_mlp(shared["mlp"], cfg, h)
+        return x, None
+
+    n_groups = cfg.n_layers // cfg.attn_every
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, act.batch_seq(x), params["groups"],
+                        unroll=flags.scan_unroll(n_groups))
+    x = L.rms_norm(x, params["final_norm"])
+    return L.mask_vocab(
+        act.constrain((x @ params["lm_head"]).astype(jnp.float32),
+                      "dp", None, "model"), cfg.vocab)
+
+
+def state_spec_hybrid(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    conv_s, ssm_s = S.mamba2_state_shapes(cfg, batch)
+    n_groups = cfg.n_layers // cfg.attn_every
+    return {
+        "conv": jax.ShapeDtypeStruct((cfg.n_layers, *conv_s), cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((cfg.n_layers, *ssm_s), jnp.float32),
+        "k": jax.ShapeDtypeStruct(
+            (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+            cfg.dtype),
+        "v": jax.ShapeDtypeStruct(
+            (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+            cfg.dtype),
+    }
+
+
+def decode_step_hybrid(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                       state: Params, lengths: jax.Array
+                       ) -> tuple[jax.Array, Params, jax.Array]:
+    b = tokens.shape[0]
+    x = params["embed"][tokens[:, 0]]  # (B, D)
+    shared = params["shared_attn"]
+    n_groups = cfg.n_layers // cfg.attn_every
+    conv = state["conv"].reshape(n_groups, cfg.attn_every,
+                                 *state["conv"].shape[1:])
+    ssm_st = state["ssm"].reshape(n_groups, cfg.attn_every,
+                                  *state["ssm"].shape[1:])
+
+    def mamba_body(x, inp):
+        blk, st_conv, st_ssm = inp
+        h = L.rms_norm(x, blk["ln"])
+        y, conv2, ssm2 = S.step_mamba2(blk["mixer"], cfg, h, st_conv, st_ssm)
+        return x + y, (conv2, ssm2)
+
+    def group_body(x, inp):
+        grp, g_conv, g_ssm, k_l, v_l = inp
+        x, (conv2, ssm2) = jax.lax.scan(mamba_body, x, (grp, g_conv, g_ssm))
+        h = L.rms_norm(x[:, None], shared["ln1"])
+        q, kk, v = L.gqa_qkv(shared["attn"], cfg, h, lengths[:, None])
+        k_c = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(k_l, kk, lengths)
+        v_c = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(v_l, v, lengths)
+        o = L.decode_attention(q, k_c, v_c, lengths=lengths + 1)
+        x = x + (o.reshape(b, -1) @ shared["attn"]["wo"])
+        h = L.rms_norm(x, shared["ln2"])
+        x = x + L.apply_mlp(shared["mlp"], cfg, h)
+        return x, (conv2, ssm2, k_c, v_c)
+
+    x, (conv2, ssm2, k2, v2) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], conv, ssm_st, state["k"], state["v"]),
+        unroll=flags.scan_unroll(n_groups))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.mask_vocab((x @ params["lm_head"]).astype(jnp.float32),
+                          cfg.vocab)
+    new_state = {
+        "conv": conv2.reshape(cfg.n_layers, *state["conv"].shape[1:]),
+        "ssm": ssm2.reshape(cfg.n_layers, *state["ssm"].shape[1:]),
+        "k": k2, "v": v2,
+    }
+    return logits, new_state, lengths + 1

@@ -1,0 +1,369 @@
+"""Shared transformer layers for the 10 assigned architectures.
+
+Attention is implemented as a *chunked online-softmax* scan over query blocks
+(a pure-jnp flash formulation).  This is (a) the memory-feasible lowering for
+the dry-run shapes (a dense S x S score tensor at 4k-32k seq does not fit),
+and (b) the oracle for the Pallas flash kernel in repro.kernels.attention.
+Feature switches cover the assigned archs: GQA, MLA (DeepSeek-V2 latent
+compression), qk-norm (qwen3 / chameleon), attention & final logit softcaps
+(gemma2), local sliding windows alternating with global layers (gemma2),
+squared-ReLU (nemotron), GeGLU/SwiGLU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def mask_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    """Mask padded logit columns (>= vocab) to -1e30.  Embedding tables are
+    allocated at cfg.padded_vocab so the vocab dim shards evenly; the mask
+    keeps loss/argmax semantics exactly at the true vocab."""
+    if logits.shape[-1] == vocab:
+        return logits
+    pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    return jnp.where(pos < vocab, logits, -1e30)
+
+
+def act_fn(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # S,1,dh/2
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (flash formulation, pure jnp)
+# ---------------------------------------------------------------------------
+
+def _chunk_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                window: int | None) -> jax.Array:
+    """(Sq, Sk) boolean mask; True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_positions: jax.Array, k_positions: jax.Array,
+              causal: bool = True, window: int | None = None,
+              logit_cap: float | None = None,
+              q_chunk: int = 1024, scale: float | None = None) -> jax.Array:
+    """Online-softmax attention (chunked flash formulation).
+
+    q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh) with Hq % Hkv == 0 (GQA;
+    k/v are head-expanded so the TP axis shards Hq).  Scans over query
+    chunks (rematted — probs are never saved for backward) so peak memory
+    is O(q_chunk * Sk) per (batch, head) rather than O(Sq * Sk).
+    """
+    from repro.dist import act_sharding as act
+    from repro.models import flags
+
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, dhv = v.shape
+    g = hq // hkv
+    if g > 1:  # expand GQA groups so 'model' shards Hq uniformly
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # PACO cut of the attention cuboid: shard heads over 'model' when they
+    # divide; otherwise cut the longest remaining dim — the key sequence —
+    # i.e. sequence-parallel attention (softmax reductions become psums).
+    # Without this, archs with few heads (gemma2: 8 < 16) replicate their
+    # attention across the model axis and go collective-bound (§Perf).
+    head_tp = (not act.active()) or hq % act.model_size() == 0
+    if head_tp:
+        q, k, v = act.heads(q), act.heads(k), act.heads(v)
+        s_spec = ("dp", "model", None, None)
+    else:
+        q = act.constrain(q, "dp", None, None, None)
+        k = act.constrain(k, "dp", "model", None, None)
+        v = act.constrain(v, "dp", "model", None, None)
+        s_spec = ("dp", None, None, "model")
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qc = min(q_chunk, sq)
+    n_chunks = -(-sq // qc)
+    pad = n_chunks * qc - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad), constant_values=-1)
+    qr = q.reshape(b, n_chunks, qc, hq, dh).transpose(1, 0, 3, 2, 4)
+    kr = k.transpose(0, 2, 1, 3)  # (B, Hq, Sk, Dh)
+    vr = v.transpose(0, 2, 1, 3)  # (B, Hq, Sk, Dhv)
+
+    def one_chunk(carry, inp):
+        qi, qpos = inp  # (B, Hq, qc, Dh), (qc,)
+        # bf16 operands + f32 accumulation (MXU-native): casting operands
+        # to f32 doubles the HBM traffic of the QK/PV matmuls (§Perf).
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, kr,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, logit_cap)
+        mask = _chunk_mask(qpos, k_positions, causal=causal, window=window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        s = act.constrain(s, *s_spec)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        p_mat = (e / jnp.maximum(z, 1e-30)).astype(vr.dtype)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p_mat, vr,
+                       preferred_element_type=jnp.float32)
+        o = act.constrain(o, "dp", "model" if head_tp else None,
+                          None, None)
+        return carry, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(one_chunk), None,
+        (qr, q_positions.reshape(n_chunks, qc)),
+        unroll=flags.scan_unroll(n_chunks))
+    # outs: (n_chunks, B, Hq, qc, Dhv)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, n_chunks * qc, hq, dhv)
+    out = act.heads(out)
+    return out[:, :sq]
+
+
+def _kv_cache_constrain(x: jax.Array) -> jax.Array:
+    """(B, S, H, dh) decode cache: heads over 'model' when divisible, else
+    sequence over 'model' (sequence-parallel KV) — mirrors
+    repro.dist.sharding.cache_specs."""
+    from repro.dist import act_sharding as act
+    if not act.active():
+        return x
+    if x.shape[2] % act.model_size() == 0:
+        return act.constrain(x, "dp", None, "model", None)
+    return act.constrain(x, "dp", "model", None, None)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     lengths: jax.Array, window: int | None = None,
+                     logit_cap: float | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Single-token decode: q (B, 1, Hq, Dh) vs cache (B, S, Hkv, Dh).
+
+    ``lengths`` (B,) = number of valid cache entries per sequence.
+    The cache stays in its grouped (Hkv) layout — decode is bytes-bound on
+    the cache read, so we never materialize the GQA expansion here.
+    """
+    from repro.dist import act_sharding as act
+
+    b, _, hq, dh = q.shape
+    _, s, hkv, dhv = v_cache.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    k_cache = _kv_cache_constrain(k_cache)
+    v_cache = _kv_cache_constrain(v_cache)
+    qr = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, logit_cap)
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lengths[:, None]  # (B, S)
+    if window is not None:
+        mask &= pos[None, :] >= (lengths[:, None] - window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dhv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+            ).astype(dtype)
+
+
+def stacked(keys, fn):
+    return jnp.stack([fn(k) for k in keys])
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, cfg.d_model, dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, cfg.d_model, d_ff, dtype)
+        p["up"] = dense_init(k3, cfg.d_model, d_ff, dtype)
+    else:  # sq_relu / plain
+        p["up"] = dense_init(k1, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p: Params, cfg, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = act_fn(cfg.act, x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dh = cfg.head_dim
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * dh, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ko, cfg.n_heads * dh, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def gqa_qkv(p: Params, cfg, x: jax.Array, positions: jax.Array
+            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_gqa(p: Params, cfg, x: jax.Array, positions: jax.Array, *,
+              causal: bool = True, window: int | None = None) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    o = attention(q, k, v, q_positions=positions, k_positions=positions,
+                  causal=causal, window=window,
+                  logit_cap=cfg.softcap_attn, q_chunk=cfg.q_chunk)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype) -> Params:
+    m = cfg.mla
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, m.q_lora, dtype),
+        "q_norm": jnp.zeros((m.q_lora,), dtype),
+        "w_uq": dense_init(ks[1], m.q_lora,
+                           h * (m.qk_nope + m.qk_rope), dtype),
+        "w_dkv": dense_init(ks[2], cfg.d_model, m.kv_lora + m.qk_rope, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora,), dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora, h * m.qk_nope, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora, h * m.v_head, dtype),
+        "wo": dense_init(ks[5], h * m.v_head, cfg.d_model, dtype),
+    }
+
+
+def mla_latents(p: Params, cfg, x: jax.Array, positions: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Compressed KV latents: c_kv (B,S,kv_lora), k_rope (B,S,1,qk_rope)."""
+    m = cfg.mla
+    ckv_kr = x @ p["w_dkv"]
+    c_kv = rms_norm(ckv_kr[..., : m.kv_lora], p["kv_norm"])
+    k_rope = apply_rope(ckv_kr[..., m.kv_lora:][:, :, None, :], positions,
+                        cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_queries(p: Params, cfg, x: jax.Array, positions: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = rms_norm(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
+    q = q.reshape(b, s, h, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla(p: Params, cfg, x: jax.Array, positions: jax.Array
+              ) -> jax.Array:
+    """MLA with the latent kept compressed: queries are projected *into* the
+    latent space (absorbed W_uk), attention runs against c_kv directly —
+    the cache-and-flops-saving trick the paper's surface-minimizing cut
+    favours (the latent face kv_lora << h*dh)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = mla_queries(p, cfg, x, positions)
+    c_kv, k_rope = mla_latents(p, cfg, x, positions)
+    # absorb W_uk: q_lat[b,s,h,kv_lora] = q_nope . W_uk(kv_lora, h, qk_nope)
+    w_uk = p["w_uk"].reshape(m.kv_lora, h, m.qk_nope)
+    q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk.transpose(0, 1, 2))
+    # scores: latent part + rope part; softmax over keys; chunked over q.
+    scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)  # (b,s,h,kv+rope)
+    k_cat = jnp.concatenate(
+        [c_kv[:, :, None, :], k_rope], axis=-1)  # (b,s,1,kv+rope)
+    o_lat = attention(q_cat, k_cat, c_kv[:, :, None, :],
+                      q_positions=positions, k_positions=positions,
+                      causal=True, q_chunk=cfg.q_chunk, scale=scale)
+    # expand latent output through W_uv: (b,s,h,kv_lora) @ (kv_lora,h,v)
+    w_uv = p["w_uv"].reshape(m.kv_lora, h, m.v_head)
+    o = jnp.einsum("bshk,khd->bshd", o_lat, w_uv)
+    return o.reshape(b, s, h * m.v_head) @ p["wo"]

@@ -1,0 +1,171 @@
+"""Unified model API: init / forward / loss / prefill / decode per family.
+
+Every architecture is selectable by ``--arch`` (configs.registry); the
+trainer, server, dry-run, and benchmarks only speak this interface.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import moe as M
+from repro.models import transformer as TF
+
+Params = dict[str, Any]
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    if cfg.family == "decoder":
+        return TF.init_decoder(cfg, key)
+    if cfg.family == "encdec":
+        return ED.init_encdec(cfg, key)
+    if cfg.family == "ssm":
+        return HY.init_ssm_lm(cfg, key)
+    if cfg.family == "hybrid":
+        return HY.init_hybrid(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def forward(params: Params, cfg: ArchConfig, batch: dict, *,
+            remat: bool = True) -> jax.Array:
+    """batch -> logits (B, S, V)."""
+    if cfg.family == "decoder":
+        return TF.forward_decoder(params, cfg, batch["tokens"], remat=remat)
+    if cfg.family == "encdec":
+        return ED.forward_encdec(params, cfg, batch["src_emb"],
+                                 batch["tokens"], remat=remat)
+    if cfg.family == "ssm":
+        return HY.forward_ssm_lm(params, cfg, batch["tokens"], remat=remat)
+    if cfg.family == "hybrid":
+        return HY.forward_hybrid(params, cfg, batch["tokens"], remat=remat)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: dict, *,
+            remat: bool = True) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE aux loss).  labels = tokens shifted
+    upstream by the data pipeline (batch["labels"])."""
+    logits = forward(params, cfg, batch, remat=remat)  # (B,S,V) f32
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-parallel gold-logit extraction: a masked reduction over the
+    # (possibly model-axis-sharded) vocab dim.  take_along_axis here would
+    # force GSPMD to all-gather the full (B,S,V) logits per device
+    # (~40 GiB/dev at 150k vocab) — the masked sum keeps every shard local
+    # and reduces with a psum.
+    vocab_pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(vocab_pos == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    metrics = {"nll": loss, "tokens": denom}
+    if cfg.moe is not None and cfg.moe.aux_loss_weight:
+        # aux loss on the mean-pooled router inputs proxy: use embeddings of
+        # the batch through layer-0 router — cheap approximation computed on
+        # the token embeddings (full per-layer aux accumulated via scan would
+        # thread extra carries; acceptable for random-init repro study).
+        emb = params["embed"][batch["tokens"]].reshape(-1, cfg.d_model)
+        router0 = jax.tree.map(lambda x: x[0], params["blocks"])["mlp"]
+        aux = M.aux_load_balance_loss(router0, cfg, emb)
+        loss = loss + cfg.moe.aux_loss_weight * aux
+        metrics["aux"] = aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving interface
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
+               src_len: int = 0) -> dict:
+    if cfg.family == "decoder":
+        return TF.cache_spec_decoder(cfg, batch, max_seq)
+    if cfg.family == "encdec":
+        return ED.cache_spec_encdec(cfg, batch, max_seq, src_len or max_seq)
+    if cfg.family == "ssm":
+        return HY.state_spec_ssm(cfg, batch)
+    if cfg.family == "hybrid":
+        return HY.state_spec_hybrid(cfg, batch, max_seq)
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               src_len: int = 0) -> Params:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq, src_len))
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                cache: Params, lengths: jax.Array
+                ) -> tuple[jax.Array, Params, jax.Array]:
+    """One new token per sequence: (logits (B,V), cache', lengths+1)."""
+    if cfg.family == "decoder":
+        return TF.decode_step_decoder(params, cfg, tokens, cache, lengths)
+    if cfg.family == "encdec":
+        return ED.decode_step_encdec(params, cfg, tokens, cache, lengths)
+    if cfg.family == "ssm":
+        return HY.decode_step_ssm(params, cfg, tokens, cache, lengths)
+    if cfg.family == "hybrid":
+        return HY.decode_step_hybrid(params, cfg, tokens, cache, lengths)
+    raise ValueError(cfg.family)
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: dict, max_seq: int):
+    """Prompt ingestion -> (last_logits, cache, lengths)."""
+    if cfg.family == "decoder":
+        return TF.prefill_decoder(params, cfg, batch["tokens"], max_seq)
+    if cfg.family == "encdec":
+        # encode source; target prefill starts empty
+        enc = ED.encode(params, cfg, batch["src_emb"])
+        b = enc.shape[0]
+        dh = cfg.head_dim
+        blocks = params["dec_blocks"]
+        src_len = enc.shape[1]
+
+        def per_layer(blk):
+            k = (enc @ blk["xattn"]["wk"]).reshape(
+                b, src_len, cfg.n_kv_heads, dh)
+            v = (enc @ blk["xattn"]["wv"]).reshape(
+                b, src_len, cfg.n_kv_heads, dh)
+            return k, v
+
+        xk, xv = jax.vmap(per_layer)(blocks)
+        cache = init_cache(cfg, b, max_seq, src_len)
+        cache["xk"], cache["xv"] = xk, xv
+        lengths = jnp.zeros((b,), jnp.int32)
+        logits = jnp.zeros((b, cfg.vocab), jnp.float32)
+        return logits, cache, lengths
+    if cfg.family in ("ssm", "hybrid"):
+        # run forward over the prompt chunked through decode is O(S) steps;
+        # training-style chunked SSD prefill returns final states.  For the
+        # framework API we run the chunked forward and rebuild states by one
+        # decode step per final token (sufficient for tests; dry-run lowers
+        # decode_step directly).
+        raise NotImplementedError(
+            "ssm/hybrid prefill: use forward() for scoring and decode_step "
+            "for generation; state-returning prefill is future work")
+    raise ValueError(cfg.family)
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ArchConfig, params: Params) -> int:
+    """Active (per-token) parameters for MoE archs: replaces the full expert
+    block by top_k + shared experts — used for MODEL_FLOPS = 6*N_active*D."""
+    total = param_count(params)
+    if not cfg.moe:
+        return total
+    m = cfg.moe
+    expert_params = 3 * cfg.d_model * m.d_ff_expert  # gate/up/down
+    inactive = (m.n_experts - m.top_k) * expert_params * cfg.n_layers
+    return total - inactive

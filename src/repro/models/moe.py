@@ -1,0 +1,260 @@
+"""Mixture-of-Experts layer (DeepSeek-V2 / OLMoE style).
+
+Router: softmax top-k over routed experts (+ optional always-on shared
+experts).  Two dispatch paths:
+
+  * ``dispatch="einsum"``  — capacity-bound scatter/gather dispatch that
+    lowers cleanly under GSPMD on any mesh (the dry-run path).  Tokens over
+    capacity are dropped (standard Switch behaviour); capacity_factor
+    controls the drop rate.
+  * ``dispatch="paco"``    — expert-parallel dispatch built on the PACO
+    sample-sort machinery (repro.core.sort): tokens are bucketed by expert
+    id (the expert ids play the pivots' role), the p x p count matrix +
+    prefix sums compute destinations, and jax.lax.all_to_all redistributes —
+    the paper's Sect. III-G redistribution inside shard_map.  Used on real
+    meshes / tests (tests/test_spmd.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def init_moe(key, cfg, dtype) -> Params:
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    e = m.n_experts
+    d, f = cfg.d_model, m.d_ff_expert
+    std = 1.0 / (d ** 0.5)
+
+    def w(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+    p = {
+        "router": w(ks[0], (d, e)),
+        "gate": w(ks[1], (e, d, f)),
+        "up": w(ks[2], (e, d, f)),
+        "down": w(ks[3], (e, f, d)),
+    }
+    if m.n_shared:
+        p["shared"] = L.init_mlp(ks[4], cfg, m.d_ff_expert * m.n_shared,
+                                 dtype)
+    return p
+
+
+def router_topk(p: Params, cfg, x: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """x (N, d) -> (weights (N,k), ids (N,k)); weights renormalized."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return w, ids
+
+
+def aux_load_balance_loss(p: Params, cfg, x: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (fraction * prob per expert)."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    _, ids = jax.lax.top_k(probs, m.top_k)
+    frac = jnp.mean(
+        jax.nn.one_hot(ids, m.n_experts, dtype=jnp.float32), axis=(0, 1))
+    return m.n_experts * jnp.sum(frac * jnp.mean(probs, 0)) / m.top_k
+
+
+def _expert_ffn(p: Params, cfg, xs: jax.Array) -> jax.Array:
+    """xs: (G, E, C, d) -> (G, E, C, d); SwiGLU per expert."""
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs, p["gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xs, p["up"])
+    return jnp.einsum("gecf,efd->gecd", h, p["down"])
+
+
+def apply_moe(p: Params, cfg, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  Group-wise capacity-bound dispatch.
+
+    Tokens are split into G groups (G = gcd(B, dp_size), i.e. one group per
+    data shard in production) with per-group expert capacity; the position
+    cumsum, scatter, expert einsum and combine all carry the group dim, so
+    every tensor stays sharded (G over dp, E over model) — no cross-shard
+    cumsum, the GShard/MaxText group-wise dispatch pattern."""
+    from repro.dist import act_sharding as act
+
+    m = cfg.moe
+    b, s, d = x.shape
+    g_groups = math.gcd(b, act.dp_size()) if act.active() else 1
+    n = b * s
+    ng = n // g_groups
+    xg = act.constrain(x.reshape(g_groups, ng, d), "dp", None, None)
+    logits = act.constrain(
+        xg.astype(jnp.float32) @ p["router"].astype(jnp.float32),
+        "dp", None, None)                            # (G, ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)           # (G, ng, k)
+    # keep router outputs dp-sharded: replicated indices make GSPMD
+    # replicate every downstream gather/scatter (measured 20 GiB copies).
+    w = act.constrain(w, "dp", None, None)
+    ids = act.constrain(ids, "dp", None, None)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    cap = max(1, int(m.capacity_factor * ng * m.top_k / m.n_experts))
+    flat_ids = ids.reshape(g_groups, ng * m.top_k)   # (G, ngk)
+    # Position-in-expert via the paper's PACO SORT (Sect. III-G): bucket
+    # the (token, slot) stream by expert with a stable argsort, derive
+    # bucket starts with a searchsorted "count matrix", rank = index -
+    # start, and invert the permutation.  This replaces the GShard
+    # (G, ngk, E) one-hot cumsum, whose reduce-window lowering costs
+    # O(ngk^2 * E) in the XLA model (measured 133 TB/chip bytes, §Perf).
+    ngk = ng * m.top_k
+    order = jnp.argsort(flat_ids, axis=1, stable=True)       # (G, ngk)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=1)
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(m.n_experts),
+                                     side="left"))(sorted_ids)  # (G, E)
+    rank_sorted = (jnp.arange(ngk)[None]
+                   - jnp.take_along_axis(starts, sorted_ids, axis=1))
+    inv = jnp.argsort(order, axis=1)
+    pos = jnp.take_along_axis(rank_sorted, inv, axis=1)       # (G, ngk)
+    pos = act.constrain(pos, "dp", None)
+    pos = pos.reshape(g_groups, ng, m.top_k)
+    keep = pos < cap                                 # (G, ng, k)
+    gi = jnp.arange(g_groups)[:, None]               # (G, 1)
+
+    # Dispatch/combine LOOP OVER THE k SLOTS (lax.scan): each slot touches
+    # only a (G, ng, d) tensor — never the (G, ng*k, d) expansion, which at
+    # top-8 x 1M tokens materializes 64 GiB/device.  Flat (E*cap) indexing
+    # + per-group vmap keeps the gathers/scatters batched on G so GSPMD
+    # shards them (3-D fancy indexing replicates; §Perf log).
+    def dispatch_slot(buf_flat, j):
+        ids_j = jax.lax.dynamic_index_in_dim(ids, j, 2, keepdims=False)
+        pos_j = jax.lax.dynamic_index_in_dim(pos, j, 2, keepdims=False)
+        keep_j = pos_j < cap
+        flat_j = jnp.where(keep_j, ids_j * cap + pos_j, cap_total)
+        xm = jnp.where(keep_j[..., None], xg, 0).astype(x.dtype)
+        buf_flat = jax.vmap(lambda b, i, v: b.at[i].add(v))(
+            buf_flat, flat_j, xm)
+        return act.constrain(buf_flat, "dp", None, None), None
+
+    cap_total = m.n_experts * cap  # index cap_total = drop slot
+    buf_flat = jnp.zeros((g_groups, cap_total + 1, d), x.dtype)
+    buf_flat = act.constrain(buf_flat, "dp", None, None)
+    from repro.models import flags
+    buf_flat, _ = jax.lax.scan(dispatch_slot, buf_flat,
+                               jnp.arange(m.top_k),
+                               unroll=flags.scan_unroll(m.top_k))
+    buf = buf_flat[:, :cap_total].reshape(g_groups, m.n_experts, cap, d)
+    buf = act.constrain(buf, "dp", "model", None, None)
+    out_e = _expert_ffn(p, cfg, buf)                 # (G, E, cap, d)
+    out_e = act.constrain(out_e, "dp", "model", None, None)
+    out_e_flat = act.constrain(
+        out_e.reshape(g_groups, cap_total, d), "dp", None, None)
+
+    def combine_slot(out, j):
+        ids_j = jax.lax.dynamic_index_in_dim(ids, j, 2, keepdims=False)
+        pos_j = jax.lax.dynamic_index_in_dim(pos, j, 2, keepdims=False)
+        w_j = jax.lax.dynamic_index_in_dim(w, j, 2, keepdims=False)
+        keep_j = pos_j < cap
+        flat_j = jnp.where(keep_j, ids_j * cap + pos_j, 0)
+        g_j = jnp.take_along_axis(out_e_flat, flat_j[..., None], axis=1)
+        g_j = act.constrain(g_j, "dp", None, None)   # (G, ng, d)
+        out = out + jnp.where(keep_j[..., None],
+                              g_j * w_j[..., None].astype(g_j.dtype), 0)
+        return act.constrain(out, "dp", None, None), None
+
+    # bf16 combine: an f32 accumulator makes every slot tensor AND the
+    # buf_flat gradients f32 (~1.6 TB/layer measured on deepseek; §Perf).
+    # top_k <= 8 bf16 adds of O(1) terms — precision loss negligible.
+    out = jnp.zeros((g_groups, ng, d), x.dtype)
+    out, _ = jax.lax.scan(combine_slot, out, jnp.arange(m.top_k),
+                          unroll=flags.scan_unroll(m.top_k))
+    if m.n_shared:
+        out = out + L.apply_mlp(p["shared"], cfg,
+                                xg.astype(x.dtype)).astype(out.dtype)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# PACO expert-parallel dispatch (shard_map all-to-all, Sect. III-G)
+# ---------------------------------------------------------------------------
+
+def apply_moe_paco_ep(p: Params, cfg, x: jax.Array, mesh, axis: str
+                      ) -> jax.Array:
+    """Expert-parallel MoE over mesh axis ``axis`` (|axis| must divide E).
+
+    Per-device: route local tokens, bucket them by *destination device*
+    (expert id // experts_per_device — the PACO sort pivot step), all-to-all
+    the buckets (count-matrix redistribution), run local experts, all-to-all
+    back, combine.  Top-1 routing on this path (k buckets per token would
+    multiply capacity; the einsum path covers k>1)."""
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    ep = mesh.shape[axis]
+    assert m.n_experts % ep == 0
+    e_local = m.n_experts // ep
+    b, s, d = x.shape
+
+    def local(x_blk, router, gate, up, down):
+        # x_blk: (b/ep? no — tokens sharded over axis) (nb, s, d)
+        nb = x_blk.shape[0] * x_blk.shape[1]
+        xf = x_blk.reshape(nb, d)
+        logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, -1)
+        wt, ids = jax.lax.top_k(probs, 1)
+        eid = ids[:, 0]                       # (nb,)
+        dest = eid // e_local                 # destination device
+        cap = max(1, int(m.capacity_factor * nb // ep))
+        # bucket by destination: stable sort by dest (counting-sort step)
+        order = jnp.argsort(dest)
+        xs, eids, dests, wts = (xf[order], eid[order], dest[order],
+                                wt[:, 0][order])
+        counts = jnp.bincount(dests, length=ep)
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(nb) - starts[dests]
+        ok = rank < cap
+        send = jnp.zeros((ep, cap, d), x_blk.dtype)
+        send = send.at[dests, jnp.minimum(rank, cap - 1)].add(
+            jnp.where(ok[:, None], xs, 0).astype(x_blk.dtype))
+        send_eid = jnp.full((ep, cap), -1, jnp.int32)
+        send_eid = send_eid.at[dests, jnp.minimum(rank, cap - 1)].set(
+            jnp.where(ok, eids.astype(jnp.int32), -1))
+        recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
+        recv_eid = jax.lax.all_to_all(send_eid, axis, 0, 0, tiled=False)
+        # local experts: recv (ep, cap, d) tokens for my e_local experts
+        my0 = jax.lax.axis_index(axis) * e_local
+        le = recv_eid - my0                   # local expert idx, -1 invalid
+        le_ok = (recv_eid >= 0)
+        onehot = jax.nn.one_hot(jnp.where(le_ok, le, 0), e_local,
+                                dtype=recv.dtype) * le_ok[..., None]
+        # (ep, cap, e_local) x (ep, cap, d) -> per-expert batches via einsum
+        h = jnp.einsum("pce,pcd,edf->pcef", onehot, recv, gate)
+        h = jax.nn.silu(h) * jnp.einsum(
+            "pce,pcd,edf->pcef", onehot, recv, up)
+        y = jnp.einsum("pcef,efd->pcd", h, down)
+        back = jax.lax.all_to_all(y, axis, 0, 0, tiled=False)
+        # un-bucket: back (ep, cap, d) aligned with send buffer slots;
+        # invert the counting-sort permutation
+        out_sorted = back[dests, jnp.minimum(rank, cap - 1)]
+        out_sorted = jnp.where(ok[:, None], out_sorted, 0)
+        inv = jnp.argsort(order)
+        out = (out_sorted * wts[:, None].astype(out_sorted.dtype))[inv]
+        return out.reshape(x_blk.shape)
+
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(), P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+    )(x, p["router"], p["gate"], p["up"], p["down"])
+    if m.n_shared:
+        out = out + L.apply_mlp(p["shared"], cfg,
+                                x.reshape(-1, d)).reshape(x.shape)
+    return out

@@ -1,0 +1,206 @@
+"""Mamba-2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the recurrence is computed as a masked
+attention-like quadratic form (MXU-friendly); across chunks states propagate
+through a (log-space) cumulative-decay product.  This mirrors the paper's
+PACO structure: the chunk grid is a 1-D wavefront whose inter-chunk
+dependency is a low-rank state (surface << volume), so chunks are the
+natural PACO partition unit for sequence parallelism.
+
+Decode maintains (conv_state, ssm_state) per layer and advances one token in
+O(d_state * d_inner) — the long_500k serve path for mamba2-780m / zamba2-7b.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import act_sharding as act
+
+Params = dict[str, Any]
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k]
+    for i >= j, -inf elsewhere."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan.  x: (B,S,H,P); a: (B,S,H) log-decay (= dt * A, negative);
+    b, c: (B,S,G,N) with H % G == 0.  Returns (y (B,S,H,P),
+    final_state (B,H,P,N))."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    xr = x.reshape(bs, nc, chunk, h, p)
+    ar = a.reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,c,l)
+    br = b.reshape(bs, nc, chunk, g, n)
+    cr = c.reshape(bs, nc, chunk, g, n)
+    br_h = jnp.repeat(br, rep, axis=3)  # (B,c,l,H,N)
+    cr_h = jnp.repeat(cr, rep, axis=3)
+    a_cum = jnp.cumsum(ar, axis=-1)  # (B,H,c,l)
+
+    # 1) intra-chunk (diagonal blocks): attention-like with decay mask
+    lmat = act.constrain(jnp.exp(segsum(ar)),
+                         "dp", "model", None, None, None)  # (B,H,c,l,l)
+    y_diag = act.constrain(
+        jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                   cr_h, br_h, lmat, xr),
+        "dp", None, None, "model", None)
+    # 2) per-chunk output states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,c,l)
+    states = act.constrain(
+        jnp.einsum("bclhn,bhcl,bclhp->bchpn", br_h, decay_states, xr),
+        "dp", None, "model", None, None)
+    # 3) inter-chunk recurrence (includes initial state h0)
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), x.dtype)
+    states = jnp.concatenate([h0[:, None], states], axis=1)
+    chunk_decay = a_cum[..., -1]  # (B,H,c) total decay per chunk
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    dmat = jnp.exp(segsum(padded))  # (B,H,c+1,c+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dmat, states)
+    states_in, final = new_states[:, :-1], new_states[:, -1]
+    # 4) state -> output within each chunk
+    state_decay = jnp.exp(a_cum)  # (B,H,c,l)
+    y_off = act.constrain(
+        jnp.einsum("bclhn,bchpn,bhcl->bclhp", cr_h, states_in,
+                   state_decay),
+        "dp", None, None, "model", None)
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    return y, final
+
+
+def ssd_step(h_prev: jax.Array, x: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One decode step.  h_prev (B,H,P,N); x (B,H,P); a (B,H);
+    b, c (B,G,N).  Returns (y (B,H,P), h_new)."""
+    g = b.shape[1]
+    rep = h_prev.shape[1] // g
+    bh = jnp.repeat(b, rep, axis=1)  # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1)
+    decay = jnp.exp(a)[..., None, None]  # (B,H,1,1)
+    h_new = decay * h_prev + x[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, ch)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg, dtype) -> Params:
+    m = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    nheads = d_in // m.headdim
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * m.n_groups * m.d_state + nheads
+    std = 1.0 / math.sqrt(cfg.d_model)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (cfg.d_model, d_proj),
+                                      jnp.float32) * std).astype(dtype),
+        "conv_w": (jax.random.normal(
+            ks[1], (m.conv_width, d_in + 2 * m.n_groups * m.d_state),
+            jnp.float32) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_in, cfg.d_model),
+                                       jnp.float32) * std).astype(dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    m = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    gn = m.n_groups * m.d_state
+    nheads = d_in // m.headdim
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn:]
+    assert dt.shape[-1] == nheads
+    return z, xbc, dt
+
+
+def apply_mamba2(p: Params, cfg, u: jax.Array) -> jax.Array:
+    """u: (B, S, d_model) -> (B, S, d_model). Training / prefill path."""
+    from repro.models.layers import rms_norm
+    m = cfg.ssm
+    bs, s, _ = u.shape
+    d_in = m.expand * cfg.d_model
+    gn = m.n_groups * m.d_state
+    nheads = d_in // m.headdim
+    z, xbc, dt = _split_proj(cfg, act.constrain(
+        u @ p["in_proj"], "dp", None, "model"))
+    # causal depthwise conv over (x, B, C)
+    w = p["conv_w"]  # (W, d_in + 2gn)
+    pad = jnp.pad(xbc, ((0, 0), (m.conv_width - 1, 0), (0, 0)))
+    conv = sum(pad[:, i: i + s] * w[i] for i in range(m.conv_width))
+    conv = jax.nn.silu(conv)
+    x = act.constrain(
+        conv[..., :d_in].reshape(bs, s, nheads, m.headdim),
+        "dp", None, "model", None)
+    b = conv[..., d_in: d_in + gn].reshape(bs, s, m.n_groups, m.d_state)
+    c = conv[..., d_in + gn:].reshape(bs, s, m.n_groups, m.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])[None, None] * dt  # log decay, negative
+    chunk = min(m.chunk, s)
+    y, _ = ssd_chunked((x * dt[..., None]).astype(jnp.float32),
+                       a, b.astype(jnp.float32), c.astype(jnp.float32),
+                       chunk)
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bs, s, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"]
+
+
+def mamba2_state_shapes(cfg, batch: int) -> tuple[tuple, tuple]:
+    m = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    gn = m.n_groups * m.d_state
+    nheads = d_in // m.headdim
+    conv_state = (batch, m.conv_width - 1, d_in + 2 * gn)
+    ssm_state = (batch, nheads, m.headdim, m.d_state)
+    return conv_state, ssm_state
+
+
+def step_mamba2(p: Params, cfg, u: jax.Array, conv_state: jax.Array,
+                ssm_state: jax.Array
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode.  u: (B, d_model)."""
+    from repro.models.layers import rms_norm
+    m = cfg.ssm
+    bs = u.shape[0]
+    d_in = m.expand * cfg.d_model
+    gn = m.n_groups * m.d_state
+    nheads = d_in // m.headdim
+    z, xbc, dt = _split_proj(cfg, u @ p["in_proj"])
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"])
+    conv = jax.nn.silu(conv)
+    new_conv_state = window[:, 1:]
+    x = conv[..., :d_in].reshape(bs, nheads, m.headdim)
+    b = conv[..., d_in: d_in + gn].reshape(bs, m.n_groups, m.d_state)
+    c = conv[..., d_in + gn:].reshape(bs, m.n_groups, m.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])[None] * dt
+    y, h_new = ssd_step(ssm_state.astype(jnp.float32),
+                        (x * dt[..., None]).astype(jnp.float32), a,
+                        b.astype(jnp.float32), c.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bs, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], new_conv_state, h_new.astype(ssm_state.dtype)

@@ -1,0 +1,276 @@
+"""Decoder-only LM backbone (covers 7 of the 10 assigned archs).
+
+Layers are *stacked* (leading L dim) and executed with jax.lax.scan so the
+HLO is O(1) in depth — essential for compiling 60-layer MoE models in the
+multi-pod dry-run.  Per-layer heterogeneity (gemma2 local/global alternation)
+is threaded through the scan as data (a per-layer window array), not as
+Python branching.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import act_sharding as act
+from repro.models import flags
+from repro.models import layers as L
+from repro.models import moe as M
+
+Params = dict[str, Any]
+_NO_WINDOW = jnp.iinfo(jnp.int32).max
+
+
+def _layer_windows(cfg: ArchConfig, n_layers: int) -> jax.Array:
+    """(L,) int32: sliding-window size per layer (INT32_MAX = global)."""
+    if not cfg.local_window or not cfg.local_global_period:
+        return jnp.full((n_layers,), _NO_WINDOW, jnp.int32)
+    idx = jnp.arange(n_layers)
+    is_local = (idx % cfg.local_global_period) == 0  # even layers local
+    return jnp.where(is_local, cfg.local_window, _NO_WINDOW).astype(
+        jnp.int32)
+
+
+def init_block(key, cfg: ArchConfig, dtype) -> Params:
+    ka, km, = jax.random.split(key, 2)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                 "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.softcap_attn is not None:  # gemma2-style post-norms
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    p["attn"] = (L.init_mla(ka, cfg, dtype) if cfg.attn == "mla"
+                 else L.init_gqa(ka, cfg, dtype))
+    p["mlp"] = (M.init_moe(km, cfg, dtype) if cfg.moe
+                else L.init_mlp(km, cfg, cfg.d_ff, dtype))
+    return p
+
+
+def init_decoder(cfg: ArchConfig, key) -> Params:
+    dtype = cfg.dtype
+    k_e, k_b, k_h = jax.random.split(key, 3)
+    blocks = [init_block(k, cfg, dtype)
+              for k in jax.random.split(k_b, cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    p: Params = {
+        "embed": (jax.random.normal(k_e, (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32)
+                  / math.sqrt(cfg.d_model)).astype(dtype),
+        "blocks": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_h, cfg.d_model, cfg.padded_vocab,
+                                    dtype)
+    return p
+
+
+def _block_apply(p: Params, cfg: ArchConfig, x: jax.Array,
+                 positions: jax.Array, window: jax.Array) -> jax.Array:
+    x = act.residual(x)
+    h = L.rms_norm(x, p["ln1"])
+    if cfg.attn == "mla":
+        a = L.apply_mla(p["attn"], cfg, h, positions)
+    else:
+        a = L.apply_gqa(p["attn"], cfg, h, positions, window=window)
+    if "ln1_post" in p:
+        a = L.rms_norm(a, p["ln1_post"])
+    x = x + a
+    h = L.rms_norm(x, p["ln2"])
+    f = (M.apply_moe(p["mlp"], cfg, h) if cfg.moe
+         else L.apply_mlp(p["mlp"], cfg, h))
+    if "ln2_post" in p:
+        f = L.rms_norm(f, p["ln2_post"])
+    return act.residual(x + f)
+
+
+def forward_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+                    remat: bool = True) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)
+    x = act.batch_seq(x)
+    positions = jnp.arange(s)
+    windows = _layer_windows(cfg, cfg.n_layers)
+
+    def body(x, inp):
+        blk, window = inp
+        return _block_apply(blk, cfg, x, positions, window), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["blocks"], windows),
+                        unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = act.constrain(x @ head, "dp", None, "model")
+    return L.mask_vocab(
+        L.softcap(logits.astype(jnp.float32), cfg.softcap_logits),
+        cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def cache_spec_decoder(cfg: ArchConfig, batch: int, max_seq: int
+                       ) -> dict[str, jax.ShapeDtypeStruct]:
+    dt = cfg.dtype
+    lyr = cfg.n_layers
+    if cfg.attn == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jax.ShapeDtypeStruct((lyr, batch, max_seq, m.kv_lora),
+                                         dt),
+            "k_rope": jax.ShapeDtypeStruct(
+                (lyr, batch, max_seq, 1, m.qk_rope), dt),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (lyr, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct(
+            (lyr, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def init_cache_decoder(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec_decoder(cfg, batch, max_seq))
+
+
+def prefill_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                    max_seq: int) -> tuple[jax.Array, Params, jax.Array]:
+    """Full forward over the prompt, returning (last_logits, cache, lengths).
+
+    The cache holds the prompt K/V (or MLA latents) padded to max_seq."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)
+    x = act.batch_seq(x)
+    positions = jnp.arange(s)
+    windows = _layer_windows(cfg, cfg.n_layers)
+    pad = max_seq - s
+
+    def body(x, inp):
+        blk, window = inp
+        h = L.rms_norm(x, blk["ln1"])
+        if cfg.attn == "mla":
+            c_kv, k_rope = L.mla_latents(blk["attn"], cfg, h, positions)
+            a = L.apply_mla(blk["attn"], cfg, h, positions)
+            ys = {"c_kv": act.constrain(
+                      jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                      "dp", "model", None),
+                  "k_rope": act.constrain(
+                      jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                      "dp", "model", None, None)}
+        else:
+            q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
+            o = L.attention(q, kk, v, q_positions=positions,
+                            k_positions=positions, causal=True,
+                            window=window, logit_cap=cfg.softcap_attn,
+                            q_chunk=cfg.q_chunk)
+            a = o.reshape(b, s, -1) @ blk["attn"]["wo"]
+            ys = {"k": L._kv_cache_constrain(
+                      jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))),
+                  "v": L._kv_cache_constrain(
+                      jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))}
+        if "ln1_post" in blk:
+            a = L.rms_norm(a, blk["ln1_post"])
+        x = x + a
+        h = L.rms_norm(x, blk["ln2"])
+        f = (M.apply_moe(blk["mlp"], cfg, h) if cfg.moe
+             else L.apply_mlp(blk["mlp"], cfg, h))
+        if "ln2_post" in blk:
+            f = L.rms_norm(f, blk["ln2_post"])
+        return act.residual(x + f), ys
+
+    x, cache = jax.lax.scan(body, x, (params["blocks"], windows),
+                            unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x[:, -1:], params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.mask_vocab(
+        L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
+        cfg.vocab)
+    lengths = jnp.full((b,), s, jnp.int32)
+    return logits[:, 0], cache, lengths
+
+
+def decode_step_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                        cache: Params, lengths: jax.Array
+                        ) -> tuple[jax.Array, Params, jax.Array]:
+    """tokens (B, 1) one new token per sequence; returns
+    (logits (B, V), new_cache, new_lengths)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)  # (B,1,D)
+    positions = lengths  # (B,) current position of the new token
+    windows = _layer_windows(cfg, cfg.n_layers)
+    max_seq = (cache["c_kv"].shape[2] if cfg.attn == "mla"
+               else cache["k"].shape[2])
+
+    def body(x, inp):
+        blk, window, cache_l = inp
+        h = L.rms_norm(x, blk["ln1"])
+        if cfg.attn == "mla":
+            m = cfg.mla
+            q_nope, q_rope = L.mla_queries(
+                blk["attn"], cfg, h, positions[:, None])
+            c_kv_new, k_rope_new = L.mla_latents(
+                blk["attn"], cfg, h, positions[:, None])
+            c_kv = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+            )(cache_l["c_kv"], c_kv_new, lengths)
+            k_rope = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(
+                    c, u, (i, 0, 0))
+            )(cache_l["k_rope"], k_rope_new, lengths)
+            w_uk = blk["attn"]["w_uk"].reshape(m.kv_lora, cfg.n_heads,
+                                               m.qk_nope)
+            q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk)
+            q_cat = jnp.concatenate([q_lat, q_rope], -1)
+            k_cat = jnp.concatenate([c_kv[:, :, None, :], k_rope], -1)
+            scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
+            o_lat = L.decode_attention(
+                q_cat, k_cat, c_kv[:, :, None, :], lengths=lengths + 1,
+                scale=scale)
+            w_uv = blk["attn"]["w_uv"].reshape(m.kv_lora, cfg.n_heads,
+                                               m.v_head)
+            o = jnp.einsum("bshk,khd->bshd", o_lat, w_uv)
+            a = o.reshape(b, 1, -1) @ blk["attn"]["wo"]
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions[:, None])
+            k_c = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(cache_l["k"], kk, lengths)
+            v_c = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(cache_l["v"], v, lengths)
+            o = L.decode_attention(q, k_c, v_c, lengths=lengths + 1,
+                                   window=window,
+                                   logit_cap=cfg.softcap_attn)
+            a = o.reshape(b, 1, -1) @ blk["attn"]["wo"]
+            new_cache = {"k": k_c, "v": v_c}
+        if "ln1_post" in blk:
+            a = L.rms_norm(a, blk["ln1_post"])
+        x = x + a
+        h = L.rms_norm(x, blk["ln2"])
+        f = (M.apply_moe(blk["mlp"], cfg, h) if cfg.moe
+             else L.apply_mlp(blk["mlp"], cfg, h))
+        if "ln2_post" in blk:
+            f = L.rms_norm(f, blk["ln2_post"])
+        return x + f, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], windows, cache),
+                                unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.mask_vocab(
+        L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
+        cfg.vocab)
+    return logits[:, 0], new_cache, lengths + 1

@@ -1,0 +1,104 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+Requests queue up; free slots are filled via prefill; one fused decode_step
+advances every active slot per tick (the production serve_step lowered by
+the dry-run).  Slot state (KV cache rows / SSM states, lengths) lives in
+fixed-shape device arrays so the step compiles once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1 = never
+    out: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, params: Params, cfg: ArchConfig, *, slots: int = 4,
+                 max_seq: int = 128):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, slots, max_seq)
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.active: list[Request | None] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.done: list[Request] = []
+        self._last_tok = jnp.zeros((slots, 1), jnp.int32)
+        self._step = jax.jit(
+            lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[slot] = req
+                # prefill by teacher-forcing the prompt through decode steps
+                # (slot-local; cache rows for other slots are untouched)
+                self.lengths = self.lengths.at[slot].set(0)
+                for tok in req.prompt[:-1]:
+                    self._decode_one_slot(slot, tok)
+                self._last_tok = self._last_tok.at[slot, 0].set(
+                    req.prompt[-1])
+
+    def _decode_one_slot(self, slot: int, tok: int) -> None:
+        toks = self._last_tok.at[slot, 0].set(tok)
+        logits, cache, lengths = self._step(self.params, toks, self.cache,
+                                            self.lengths)
+        # commit only this slot's cache rows / length
+        def commit(new, old):
+            if new.ndim >= 2 and new.shape[1] == self.slots:
+                return old.at[:, slot].set(new[:, slot])
+            return old
+
+        self.cache = jax.tree.map(commit, cache, self.cache)
+        self.lengths = self.lengths.at[slot].set(lengths[slot])
+
+    def tick(self) -> int:
+        """One decode step for all active slots; returns #finished."""
+        self._admit()
+        if all(r is None for r in self.active):
+            return 0
+        logits, self.cache, self.lengths = self._step(
+            self.params, self._last_tok, self.cache, self.lengths)
+        nxt = jnp.argmax(logits, axis=-1)  # greedy
+        finished = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self._last_tok = self._last_tok.at[slot, 0].set(tok)
+            if (len(req.out) >= req.max_new_tokens or tok == req.eos_id
+                    or int(self.lengths[slot]) >= self.max_seq - 1):
+                self.done.append(req)
+                self.active[slot] = None
+                finished += 1
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.tick()
+        return self.done

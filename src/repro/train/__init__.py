@@ -1,0 +1,6 @@
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step, train_step)
+from repro.train.trainer import Trainer
+
+__all__ = ["TrainConfig", "init_train_state", "make_train_step",
+           "train_step", "Trainer"]

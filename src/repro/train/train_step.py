@@ -1,0 +1,82 @@
+"""The jitted train step: loss -> grads -> (optional compression) -> AdamW.
+
+Built once per (arch, mesh) with PACO-planned shardings; donates params and
+optimizer state so the update is in-place on device.  Gradient accumulation
+(microbatching) runs as a lax.scan over microbatch slices with a rematted
+forward, overlapping the per-microbatch reduce-scatter with the next
+microbatch's compute (XLA latency hiding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import loss_fn
+from repro.optim import (AdamWConfig, adamw_update, compress_grads,
+                         init_error_buffer, init_opt_state)
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    remat: bool = True
+    compress_dp_grads: bool = False
+
+
+def init_train_state(cfg: ArchConfig, tcfg: TrainConfig, params: Params
+                     ) -> dict:
+    state = {"opt": init_opt_state(params)}
+    if tcfg.compress_dp_grads:
+        state["err"] = init_error_buffer(params)
+        state["key"] = jax.random.PRNGKey(17)
+    return state
+
+
+def _grads(params, cfg, tcfg, batch):
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=tcfg.remat),
+            has_aux=True)(params)
+        return loss, metrics, grads
+    mb = tcfg.microbatches
+    sliced = jax.tree.map(
+        lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch)
+
+    def one(carry, mb_batch):
+        acc, loss_acc = carry
+        (loss, _), g = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, mb_batch, remat=tcfg.remat),
+            has_aux=True)(params)
+        acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+        return (acc, loss_acc + loss), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, loss_sum), _ = jax.lax.scan(one, (zero, 0.0), sliced)
+    grads = jax.tree.map(lambda g: g / mb, gsum)
+    return loss_sum / mb, {"nll": loss_sum / mb}, grads
+
+
+def train_step(params: Params, state: dict, batch: dict, *,
+               cfg: ArchConfig, tcfg: TrainConfig
+               ) -> tuple[Params, dict, dict]:
+    loss, metrics, grads = _grads(params, cfg, tcfg, batch)
+    if tcfg.compress_dp_grads:
+        key, sub = jax.random.split(state["key"])
+        grads, err = compress_grads(grads, state["err"], sub)
+        state = dict(state, err=err, key=key)
+    params, opt, om = adamw_update(tcfg.opt, params, grads, state["opt"])
+    state = dict(state, opt=opt)
+    return params, state, {"loss": loss, **metrics, **om}
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
+    """Partially-applied step suitable for jax.jit(lower/compile)."""
+    return functools.partial(train_step, cfg=cfg, tcfg=tcfg)

@@ -1,0 +1,64 @@
+"""Training loop: data -> jitted step -> metrics/checkpoints, with
+straggler tracking + elastic hooks wired in."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as C
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, global_batch_rowwise
+from repro.ft.straggler import ThroughputTracker, rebalance_batch
+from repro.models import init_params
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: ArchConfig
+    tcfg: TrainConfig
+    dcfg: DataConfig
+    ckpt_dir: str | None = None
+    save_every: int = 50
+    log_every: int = 10
+    hooks: list[Callable[[int, dict], None]] = dataclasses.field(
+        default_factory=list)
+
+    def init(self, seed: int = 0):
+        params = init_params(self.cfg, jax.random.PRNGKey(seed))
+        state = init_train_state(self.cfg, self.tcfg, params)
+        return params, state
+
+    def run(self, steps: int, *, params=None, state=None,
+            start_step: int = 0) -> tuple[Any, Any, list[dict]]:
+        if params is None:
+            params, state = self.init()
+        step_fn = jax.jit(make_train_step(self.cfg, self.tcfg),
+                          donate_argnums=(0, 1))
+        history: list[dict] = []
+        tracker = ThroughputTracker(n_hosts=jax.process_count())
+        for step in range(start_step, start_step + steps):
+            batch = global_batch_rowwise(self.dcfg, step,
+                                         d_model=self.cfg.d_model)
+            t0 = time.perf_counter()
+            params, state, metrics = step_fn(params, state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time_s"] = time.perf_counter() - t0
+            tracker.update(np.array([metrics["step_time_s"]]))
+            history.append({"step": step, **metrics})
+            for hook in self.hooks:
+                hook(step, metrics)
+            if self.log_every and step % self.log_every == 0:
+                print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                      f"lr {metrics.get('lr', 0):.2e} "
+                      f"{metrics['step_time_s'] * 1e3:.0f} ms")
+            if (self.ckpt_dir and self.save_every
+                    and (step + 1) % self.save_every == 0):
+                C.save(self.ckpt_dir, step + 1, params)
+                C.save(self.ckpt_dir + "_state", step + 1, state)
+        return params, state, history
