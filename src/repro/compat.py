@@ -1,0 +1,40 @@
+"""Compatibility shims for jax APIs that moved between releases.
+
+The stack targets the shard_map/mesh API surface of recent jax; older
+runtimes (0.4.x) expose the same functionality under experimental /
+different-keyword locations.  Every caller imports from here so the
+version switch lives in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.6: public top-level shard_map
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """jax.make_mesh with Auto axis types where the runtime supports them.
+
+    Newer jax requires axis_types to opt out of explicit-sharding meshes;
+    0.4.x predates AxisType entirely and every mesh is implicitly Auto.
+    Pre-0.4.35 jax lacks make_mesh too — fall back to a plain device grid.
+    """
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError, AttributeError):
+        pass
+    try:
+        return jax.make_mesh(axis_shapes, axis_names)
+    except AttributeError:
+        import numpy as np
+        from jax.sharding import Mesh
+        n = int(np.prod(axis_shapes))
+        devs = np.asarray(jax.devices()[:n]).reshape(axis_shapes)
+        return Mesh(devs, tuple(axis_names))

@@ -23,7 +23,6 @@ tree to an SPMD mesh sharding, used by repro.dist.sharding.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 from repro.core import tree as paco_tree
@@ -253,24 +252,41 @@ def plan_hetero(n: int, m: int, k: int,
 # Bridge to SPMD meshes
 # ---------------------------------------------------------------------------
 
+def _prime_factors(p: int) -> list[int]:
+    fs = []
+    d = 2
+    while d * d <= p:
+        while p % d == 0:
+            fs.append(d)
+            p //= d
+        d += 1
+    if p > 1:
+        fs.append(p)
+    return fs
+
+
 def mesh_factors(n: int, m: int, k: int, p: int) -> tuple[int, int, int]:
-    """(pn, pm, pk) with pn*pm*pk == p for power-of-two p: how many ways the
+    """(pn, pm, pk) with pn*pm*pk == p for ANY p >= 1: how many ways the
     1-piece cut tree divides each dimension.  This converts the paper's cut
-    schedule into a 3-D processor grid for shard_map / pjit."""
-    if p & (p - 1):
-        raise ValueError(f"mesh_factors requires power-of-two p, got {p}")
+    schedule into a 3-D processor grid for shard_map / pjit.
+
+    Each prime factor of p (largest first) cuts the virtual cuboid's
+    longest dimension that many ways; for power-of-two p this replays the
+    1-piece halving schedule exactly, and a prime p lands entirely on the
+    longest dimension (Corollary 10 needs no divisibility)."""
+    if p < 1:
+        raise ValueError(f"mesh_factors requires p >= 1, got {p}")
     pn = pm = pk = 1
     virt = Cuboid(0, max(n, 1), 0, max(m, 1), 0, max(k, 1))
-    rounds = int(math.log2(p)) if p > 1 else 0
-    for _ in range(rounds):
+    for q in sorted(_prime_factors(p), reverse=True):
         d = virt.longest_dim()
         if d == "n":
-            pn *= 2
+            pn *= q
         elif d == "m":
-            pm *= 2
+            pm *= q
         else:
-            pk *= 2
-        virt, _ = virt.split(d, 1, 2)
+            pk *= q
+        virt, _ = virt.split(d, 1, q)
     return pn, pm, pk
 
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import cuboid as cub
 
 
@@ -97,7 +98,7 @@ def paco_matmul_shmap(a: jax.Array, b: jax.Array, mesh: Mesh) -> jax.Array:
         return jax.lax.psum_scatter(part, "pc_k", scatter_dimension=1,
                                     tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P("pc_n", "pc_k"), P("pc_k", "pc_m")),

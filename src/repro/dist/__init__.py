@@ -1,0 +1,25 @@
+"""repro.dist — PACO-planned distributed execution (DESIGN.md §4).
+
+Three layers, all driven by the planners in repro.core:
+
+  * ``sharding``     — weight/batch/cache PartitionSpecs from the 1-piece
+                       cut tree (paco_spec / mesh_factors).
+  * ``act_sharding`` — logical-axis activation constraints bound to a mesh
+                       via the ``use_mesh_rules`` context manager.
+  * ``pipeline``     — balanced layer-to-stage partitioning + a GPipe
+                       schedule over the pod axis.
+"""
+from repro.dist import act_sharding, pipeline, sharding
+from repro.dist.act_sharding import (active, constrain, dp_size, model_size,
+                                     use_mesh_rules)
+from repro.dist.pipeline import pipeline_apply, stack_stage_params, \
+    stage_ranges
+from repro.dist.sharding import (batch_specs, cache_specs, dp_axes,
+                                 param_specs, to_named)
+
+__all__ = [
+    "act_sharding", "pipeline", "sharding",
+    "active", "constrain", "dp_size", "model_size", "use_mesh_rules",
+    "pipeline_apply", "stack_stage_params", "stage_ranges",
+    "batch_specs", "cache_specs", "dp_axes", "param_specs", "to_named",
+]

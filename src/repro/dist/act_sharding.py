@@ -1,0 +1,160 @@
+"""Logical-axis activation sharding constraints (DESIGN.md §4).
+
+Model code never names mesh axes directly: it annotates activations with
+*logical* axes — ``"dp"`` (the data-parallel axes: ``pod`` and ``data``
+where present) and ``"model"`` (the tensor-parallel axis) — via
+``constrain`` and the shape-specific helpers (``batch_seq``, ``residual``,
+``heads``).  ``use_mesh_rules`` binds a mesh for the duration of a trace;
+outside the context every helper is the identity, so the same model code
+runs unsharded on one device and PACO-sharded on a pod.
+
+Divisibility is checked per dimension: a logical axis whose mesh size does
+not divide the tensor dimension is silently dropped (the PACO planner's
+fallback — never force an uneven cut where GSPMD would pad; the planner
+re-cuts a different dimension instead, see repro.dist.sharding).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical-axis table: which mesh axes realize each logical name, in
+# major-to-minor order.  "dp" spans every data-parallel axis present.
+_DP_AXES = ("pod", "data")
+_MODEL_AXIS = "model"
+
+_state = threading.local()
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh):
+    """Bind ``mesh`` as the activation-sharding target for this thread.
+
+    Nestable; the previous binding is restored on exit.  Everything traced
+    inside (jit lowering included) sees the mesh via the module helpers.
+    """
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def active() -> bool:
+    """True when a mesh-rules context is bound."""
+    return _mesh() is not None
+
+
+def dp_axis_names(mesh: Mesh | None = None) -> tuple[str, ...]:
+    """The data-parallel axes present in ``mesh`` (major to minor)."""
+    mesh = mesh if mesh is not None else _mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in _DP_AXES if a in mesh.shape)
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def model_size() -> int:
+    """Size of the tensor-parallel axis (1 when inactive/absent)."""
+    mesh = _mesh()
+    if mesh is None or _MODEL_AXIS not in mesh.shape:
+        return 1
+    return mesh.shape[_MODEL_AXIS]
+
+
+def dp_size() -> int:
+    """Product of the data-parallel axis sizes (1 when inactive)."""
+    mesh = _mesh()
+    if mesh is None:
+        return 1
+    return _axes_size(mesh, dp_axis_names(mesh))
+
+
+def shed_to_divisible(mesh: Mesh, axes: tuple[str, ...], dim: int
+                      ) -> tuple[str, ...]:
+    """The PACO divisibility fallback: drop major axes (pod first) until
+    the combined size divides ``dim``; () when none fit."""
+    while axes and dim % _axes_size(mesh, axes):
+        axes = axes[1:]
+    return axes
+
+
+def _resolve(mesh: Mesh, name: str | None) -> tuple[str, ...]:
+    if name is None:
+        return ()
+    if name == "dp":
+        return dp_axis_names(mesh)
+    if name in mesh.shape:
+        return (name,)
+    return ()
+
+
+def spec_for(mesh: Mesh, shape: tuple[int, ...], names: tuple) -> P:
+    """Concrete PartitionSpec for ``shape`` under the logical ``names``.
+
+    Per dim: resolve the logical name to mesh axes, keep them only if their
+    combined size divides the dimension and none was already used (a mesh
+    axis may appear once per spec); for the "dp" bundle, fall back through
+    suffixes (drop the pod axis first) before giving up.
+    """
+    assert len(shape) == len(names), (shape, names)
+    entries = []
+    used: set[str] = set()
+    for dim, name in zip(shape, names):
+        axes = shed_to_divisible(
+            mesh, tuple(a for a in _resolve(mesh, name) if a not in used),
+            dim)
+        if axes:
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *names) -> jax.Array:
+    """with_sharding_constraint under the active mesh rules (identity when
+    inactive).  One logical name per dimension: "dp", "model", a concrete
+    mesh axis name, or None."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, tuple(x.shape), names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Shape-specific helpers (the vocabulary model code actually speaks)
+# ---------------------------------------------------------------------------
+
+def batch_seq(x: jax.Array) -> jax.Array:
+    """(B, S, D) activations entering the layer stack: batch over dp."""
+    return constrain(x, "dp", None, None)
+
+
+def residual(x: jax.Array) -> jax.Array:
+    """(B, S, D) residual stream: batch over dp, replicated over model —
+    the paper's output-face rule (residual adds are elementwise; cutting
+    d_model here would psum every block)."""
+    return constrain(x, "dp", None, None)
+
+
+def heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, Dh) per-head activations: heads over the model axis (the
+    attention cuboid's head cut), batch over dp."""
+    return constrain(x, "dp", None, "model", None)

@@ -1,0 +1,180 @@
+"""PACO-planned parameter / batch / cache PartitionSpecs (DESIGN.md §4).
+
+The bridge from the paper's cut trees to GSPMD: every weight is a face of
+its matmul cuboid (tokens x d_out x d_in), and the tensor-parallel mesh
+axis shards the dimension the 1-piece planner would cut FIRST — the
+longest weight face (``core.matmul.paco_spec``), not a fixed
+Megatron-style rule.  Wide-output weights come out column-parallel,
+wide-input weights row-parallel (their k-cut is ``paco_spec``'s
+``needs_psum`` branch: GSPMD inserts the combining reduction the paper's
+k-cut schedules), and non-divisible faces fall back to the next-longest
+divisible cut.  The data-parallel axes FSDP-shard the remaining face.
+
+Public API (consumed by launch/dryrun, launch/roofline, tests/test_spmd):
+  param_specs(cfg, params, mesh) -> pytree of PartitionSpec
+  batch_specs(cfg, mesh, batch)  -> pytree of PartitionSpec
+  cache_specs(cfg, mesh, cache)  -> dict of PartitionSpec
+  dp_axes(mesh)                  -> data-parallel axis names
+  to_named(mesh, specs)          -> pytree of NamedSharding
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.matmul import paco_spec
+from repro.dist.act_sharding import (_MODEL_AXIS, dp_axis_names,
+                                     shed_to_divisible)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axis names present in ``mesh`` (major to minor)."""
+    return dp_axis_names(mesh)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get(_MODEL_AXIS, 1)
+
+
+def _dp_entry(mesh: Mesh, dim: int):
+    """PartitionSpec entry sharding ``dim`` over the dp axes (the
+    shed-to-divisible fallback); None if no dp axis fits."""
+    axes = shed_to_divisible(mesh, dp_axes(mesh), dim)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _weight_spec(d_in: int, d_out: int, mesh: Mesh) -> P:
+    """PartitionSpec for a (d_in, d_out) matmul weight.
+
+    The model axis lands on the dimension the PACO 1-piece tree cuts first
+    for the cuboid (tokens x d_out x d_in): ``paco_spec``'s B-face spec is
+    (k, m) = (d_in, d_out), so an m-dominant cut is column-parallel and a
+    k-dominant cut row-parallel (the reduction path).  Non-divisible first
+    choices fall back to the other face, then to no model cut at all; the
+    dp axes FSDP-shard the longest remaining divisible face.
+    """
+    pm = _model_size(mesh)
+    dims = (d_in, d_out)
+    model_dim = None
+    if _MODEL_AXIS in mesh.shape and pm > 1:
+        # Token extent 1 restricts the planner's first cut to the weight's
+        # own faces — the longest-dim rule on the (m, k) rectangle.
+        _, spec_b, _, _ = paco_spec(1, d_out, d_in, pm, _MODEL_AXIS)
+        model_dim = 0 if spec_b[0] == _MODEL_AXIS else 1
+        if dims[model_dim] % pm:
+            model_dim = 1 - model_dim
+            if dims[model_dim] % pm:
+                model_dim = None
+    entries: list = [None, None]
+    if model_dim is not None:
+        entries[model_dim] = _MODEL_AXIS
+    free = [i for i in (0, 1) if entries[i] is None]
+    for i in sorted(free, key=lambda i: -dims[i]):
+        e = _dp_entry(mesh, dims[i])
+        if e is not None:
+            entries[i] = e
+            break
+    return P(*entries)
+
+
+def _expert_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """(..., E, d, f) expert-stacked weights: experts over the model axis
+    (expert parallelism — the cut that keeps each expert's FFN local), dp
+    FSDP on the longest divisible remaining face."""
+    pm = _model_size(mesh)
+    lead = len(shape) - 3
+    e_entry = (_MODEL_AXIS if _MODEL_AXIS in mesh.shape and pm > 1
+               and shape[-3] % pm == 0 else None)
+    entries: list = [None, None]
+    dims = shape[-2:]
+    for i in sorted((0, 1), key=lambda i: -dims[i]):
+        e = _dp_entry(mesh, dims[i])
+        if e is not None:
+            entries[i] = e
+            break
+    return P(*((None,) * lead), e_entry, *entries)
+
+
+def param_specs(cfg, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a parameter pytree (arrays or
+    ShapeDtypeStructs).  Scalars/vectors replicate; matrices get the PACO
+    weight rule on their trailing two dims (leading stacked layer/group
+    dims replicate); MoE expert stacks additionally shard the expert dim
+    over the model axis."""
+    n_experts = cfg.moe.n_experts if getattr(cfg, "moe", None) else -1
+
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        if len(shape) <= 1:
+            return P()
+        if len(shape) >= 3 and shape[-3] == n_experts:
+            return _expert_spec(shape, mesh)
+        lead = (None,) * (len(shape) - 2)
+        return P(*lead, *_weight_spec(shape[-2], shape[-1], mesh))
+
+    return jax.tree.map(spec, params)
+
+
+def batch_specs(cfg, mesh: Mesh, batch: Any) -> Any:
+    """Global-batch inputs: leading (batch) dim over the dp axes, the rest
+    replicated — every shape cell's global_batch divides the production dp
+    extent (configs.base)."""
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        return P(_dp_entry(mesh, shape[0]), *((None,) * (len(shape) - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cfg, mesh: Mesh, cache: Mapping[str, Any]
+                ) -> dict[str, P]:
+    """Decode-state shardings, mirroring the activation constraints the
+    model applies (layers._kv_cache_constrain and friends): attention K/V
+    shard heads over the model axis when they divide, else the sequence
+    (sequence-parallel KV); MLA latents and SSM states shard their longest
+    model-divisible face; batch always rides the dp axes."""
+    pm = _model_size(mesh)
+    has_model = _MODEL_AXIS in mesh.shape and pm > 1
+
+    def model_on(shape: tuple[int, ...], *dims: int):
+        """First dim index (in preference order) divisible by the model
+        axis, or None."""
+        if not has_model:
+            return None
+        for d in dims:
+            if shape[d] % pm == 0:
+                return d
+        return None
+
+    specs: dict[str, P] = {}
+    for name, leaf in cache.items():
+        shape = tuple(leaf.shape)
+        entries: list = [None] * len(shape)
+        if len(shape) >= 2:
+            entries[1] = _dp_entry(mesh, shape[1])
+        if name in ("k", "v", "xk", "xv"):      # (L, B, S, H, dh)
+            d = model_on(shape, 3, 2)           # heads first, else sequence
+        elif name == "c_kv":                    # (L, B, S, kv_lora)
+            d = model_on(shape, 2)
+        elif name == "k_rope":                  # (L, B, S, 1, qk_rope)
+            d = model_on(shape, 2)
+        elif name == "conv":                    # (L, B, W-1, C)
+            d = model_on(shape, 3)
+        elif name == "ssm":                     # (L, B, H, P, N)
+            d = model_on(shape, 2)
+        else:
+            d = None
+        if d is not None:
+            entries[d] = _MODEL_AXIS
+        specs[name] = P(*entries)
+    return specs
+
+
+def to_named(mesh: Mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -6,8 +6,7 @@ sees the real device count).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,11 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     data-parallel across pods (or pipeline stages, see DESIGN.md §4)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over whatever local devices exist (tests/examples)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

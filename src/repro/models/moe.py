@@ -23,6 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models import layers as L
 
 Params = dict[str, Any]
@@ -249,7 +250,7 @@ def apply_moe_paco_ep(p: Params, cfg, x: jax.Array, mesh, axis: str
         out = (out_sorted * wts[:, None].astype(out_sorted.dtype))[inv]
         return out.reshape(x_blk.shape)
 
-    out = jax.shard_map(
+    out = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P(), P(axis), P(axis), P(axis)),
         out_specs=P(axis),

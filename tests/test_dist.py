@@ -1,0 +1,148 @@
+"""Planner -> spec bridge: paco_spec's k-cut (needs_psum) branch,
+mesh_factors on prime/arbitrary p, and the repro.dist.sharding rules —
+including an 8-device subprocess check that param_specs/to_named produce
+device_put-able shardings whose sharded dimension tracks the cut tree."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.core import mesh_factors
+from repro.core.matmul import paco_spec
+from repro.dist.sharding import (_weight_spec, batch_specs, cache_specs,
+                                 dp_axes, param_specs)
+from repro.models import cache_spec
+
+ENV = dict(os.environ,
+           XLA_FLAGS="--xla_force_host_platform_device_count=8",
+           PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices() * n)[:n].reshape(shape)
+    return Mesh(devs, axes)
+
+
+# ---------------------------------------------------------------------------
+# core.matmul.paco_spec / core.cuboid.mesh_factors
+# ---------------------------------------------------------------------------
+
+def test_paco_spec_needs_psum_k_dominant():
+    # k-dominant: both operands shard the contraction dim -> GSPMD must
+    # insert the combining reduction (the cut tree's k-cut add).
+    sa, sb, sc, psum = paco_spec(64, 64, 4096, 8, "model")
+    assert psum
+    assert sa == P(None, "model") and sb == P("model", None)
+    assert sc == P(None, None)
+    # n- and m-dominant cuts split outputs: embarrassingly parallel.
+    sa, sb, sc, psum = paco_spec(4096, 64, 64, 8, "model")
+    assert not psum and sa == P("model", None) and sc == P("model", None)
+    sa, sb, sc, psum = paco_spec(64, 4096, 64, 8, "model")
+    assert not psum and sb == P(None, "model") and sc == P(None, "model")
+
+
+def test_mesh_factors_prime_and_arbitrary_p():
+    for p in (1, 2, 3, 5, 7, 11, 12, 24, 97, 100):
+        pn, pm, pk = mesh_factors(4096, 2048, 512, p)
+        assert pn * pm * pk == p
+    # prime p lands entirely on the longest dimension
+    assert mesh_factors(8192, 128, 128, 13) == (13, 1, 1)
+    # power-of-two p replays the 1-piece halving schedule (seed behaviour)
+    assert mesh_factors(256, 192, 128, 8) == (4, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# dist.sharding rules (fake 256-device mesh: only mesh.shape matters)
+# ---------------------------------------------------------------------------
+
+def test_weight_spec_tracks_dominant_dim():
+    """Flip the dominant weight face and the model axis follows the cut."""
+    mesh = _fake_mesh()
+    wide_out = _weight_spec(1024, 4096, mesh)  # m-cut: column parallel
+    wide_in = _weight_spec(4096, 1024, mesh)   # k-cut: row parallel
+    assert wide_out[1] == "model" and wide_in[0] == "model"
+    assert wide_out != wide_in
+
+
+def test_dp_axes_and_batch_specs_multi_pod():
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert dp_axes(mesh) == ("pod", "data")
+    cfg = get_arch("qwen3-0.6b")
+    bs = batch_specs(cfg, mesh, {
+        "tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((256, 4096), jnp.int32)})
+    assert bs["tokens"] == P(("pod", "data"), None)
+    # batch not divisible by pod*data: shed the pod axis, keep data
+    bs = batch_specs(cfg, mesh, {
+        "tokens": jax.ShapeDtypeStruct((16, 4096), jnp.int32)})
+    assert bs["tokens"] == P("data", None)
+
+
+def test_cache_specs_mirror_kv_constraints():
+    mesh = _fake_mesh()
+    cfg = get_arch("qwen3-0.6b")
+    cs = cache_specs(cfg, mesh, cache_spec(cfg, 128, 32768))
+    # (L, B, S, H, dh): batch over data; heads over model when they
+    # divide, else sequence-parallel KV — one of the two must be cut.
+    assert cs["k"][1] == "data"
+    assert "model" in (cs["k"][2], cs["k"][3])
+    mla = get_arch("deepseek-v2-236b")
+    cs = cache_specs(mla, mesh, cache_spec(mla, 128, 32768))
+    assert cs["c_kv"][2] == "model"  # latent cache: sequence over model
+
+
+def test_param_specs_expert_stacks():
+    mesh = _fake_mesh()
+    cfg = get_arch("olmoe-1b-7b")
+    e = cfg.moe.n_experts
+    specs = param_specs(cfg, {
+        "gate": jax.ShapeDtypeStruct((16, e, 2048, 1024), jnp.float32)},
+        mesh)
+    assert specs["gate"][1] == "model"  # expert parallelism over model
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: real mesh, real device_put
+# ---------------------------------------------------------------------------
+
+def test_param_specs_cut_tree_on_host_mesh():
+    body = """
+        import jax, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.core.cuboid import Cuboid
+        from repro.dist.sharding import param_specs, to_named
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import init_params
+        cfg = get_arch("qwen3-0.6b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_host_mesh((2, 4))
+        specs = param_specs(cfg, params, mesh)
+        jax.block_until_ready(
+            jax.device_put(params, to_named(mesh, specs)))  # must be legal
+        # the embedding's sharded dim is the cut tree's first cut: the
+        # longest face of the (1, d_model, vocab) cuboid
+        vocab, d_model = params["embed"].shape
+        dom = Cuboid(0, 1, 0, d_model, 0, vocab).longest_dim()
+        want_dim = 0 if dom == "k" else 1
+        assert specs["embed"][want_dim] == "model", specs["embed"]
+        # acceptance: flip the dominant dimension, the spec must flip too
+        a = param_specs(cfg, {"w": jax.ShapeDtypeStruct(
+            (63, 4096), np.float32)}, mesh)["w"]
+        b = param_specs(cfg, {"w": jax.ShapeDtypeStruct(
+            (4096, 63), np.float32)}, mesh)["w"]
+        assert a == P(None, "model") and b == P("model", None), (a, b)
+        print("OK")
+    """
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                          env=ENV, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     Cuboid, geometric_decrease_ok, gap_reference, lcs_reference,
@@ -115,8 +116,14 @@ def test_mesh_factors_product_and_shape():
     # skewed matmul: k tiny => never cut k
     pn, pm, pk = mesh_factors(8192, 8192, 128, 16)
     assert pk == 1
+    # arbitrary p (primes welcome): product always exact, prime factors
+    # land on the (then-)longest dimension
+    for p in (3, 5, 6, 7, 12, 30, 97):
+        pn, pm, pk = mesh_factors(4096, 2048, 1024, p)
+        assert pn * pm * pk == p
+    assert mesh_factors(4096, 64, 64, 7) == (7, 1, 1)
     with pytest.raises(ValueError):
-        mesh_factors(64, 64, 64, 3)
+        mesh_factors(64, 64, 64, 0)
 
 
 def test_paco_comm_beats_megatron_on_skewed_shapes():

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import latest_step, prune_old, restore, save
 from repro.configs import get_arch
