@@ -1,0 +1,97 @@
+"""Serving benchmark: sustained tok/s + time-to-first-token (TTFT).
+
+qwen3-0.6b-reduced on the paged continuous-batching engine at slots in
+{4, 16} — the perf trajectory baseline for the serving path
+(BENCH_serve.json; re-generate with
+``PYTHONPATH=src python -m benchmarks.bench_serve --write-baseline``).
+
+Protocol: compile first (one throwaway request exercises prefill +
+decode), then (a) TTFT = wall time from submit to the first emitted
+token of a single request on an idle engine, min of 3; (b) throughput =
+total generated tokens / wall time draining 2*slots requests of 16 new
+tokens each.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+ARCH = "qwen3-0.6b"
+NEW_TOKENS = 16
+BASELINE = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serve.json"
+
+
+def _engine(slots: int) -> ServeEngine:
+    cfg = get_arch(ARCH).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ServeEngine(params, cfg, slots=slots, max_seq=64)
+
+
+def measure(slots: int) -> dict:
+    eng = _engine(slots)
+    # compile: one request through prefill + decode + retirement
+    eng.submit(Request(uid=-1, prompt=[1, 2, 3], max_new_tokens=2))
+    eng.run_until_drained()
+    eng.done.clear()
+
+    ttft = float("inf")
+    for i in range(3):
+        t0 = time.perf_counter()
+        eng.submit(Request(uid=1000 + i, prompt=[1 + i, 2, 3],
+                           max_new_tokens=1))
+        eng.tick()   # admission prefill emits the first token
+        ttft = min(ttft, time.perf_counter() - t0)
+        eng.run_until_drained()
+        eng.done.clear()
+
+    n_req = 2 * slots
+    for i in range(n_req):
+        eng.submit(Request(uid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
+                           max_new_tokens=NEW_TOKENS))
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out) for r in done)
+    return {"slots": slots, "requests": n_req, "tokens": total,
+            "tok_s": round(total / dt, 1),
+            "ttft_ms": round(ttft * 1e3, 2),
+            "page_size": eng.page, "prefill_chunk": eng.chunk,
+            "pool_pages": eng.pool.n_pages}
+
+
+def main() -> dict:
+    results = {}
+    for slots in (4, 16):
+        r = measure(slots)
+        results[str(slots)] = r
+        row(f"serve_{ARCH}_s{slots}_tok_s", 1e6 / max(r["tok_s"], 1e-9),
+            f"tok_s={r['tok_s']}")
+        row(f"serve_{ARCH}_s{slots}_ttft", r["ttft_ms"] * 1e3,
+            f"ttft_ms={r['ttft_ms']}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"write {BASELINE.name} next to the repo root")
+    args = ap.parse_args()
+    res = main()
+    if args.write_baseline:
+        payload = {"arch": f"{ARCH}-reduced", "new_tokens": NEW_TOKENS,
+                   "note": "CPU host baseline; absolute numbers are "
+                           "machine-dependent — track the trajectory, "
+                           "not the value",
+                   "slots": res}
+        BASELINE.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {BASELINE}")

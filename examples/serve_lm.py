@@ -1,6 +1,7 @@
-"""Batched serving demo: continuous batching over fixed decode slots.
+"""Paged continuous-batching demo: page pool, block tables, chunked
+prefill, fused decode over slots.
 
-  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
 """
 import argparse
 import time
@@ -29,8 +30,10 @@ def main() -> None:
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out) for r in done)
     print(f"{cfg.name}: {len(done)} requests, {tokens} tokens "
-          f"in {dt:.2f}s ({tokens / dt:.1f} tok/s, continuous batching "
-          f"over 4 slots)")
+          f"in {dt:.2f}s ({tokens / dt:.1f} tok/s; paged KV: "
+          f"{engine.pool.n_pages} pages of {engine.page} positions, "
+          f"{engine.stats['prefill_calls']} prefill calls, "
+          f"{engine.stats['decode_steps']} fused decode steps)")
     for r in sorted(done, key=lambda r: r.uid)[:3]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.out}")
 

@@ -104,19 +104,32 @@ def param_specs(cfg, params: Any, mesh: Mesh) -> Any:
     ShapeDtypeStructs).  Scalars/vectors replicate; matrices get the PACO
     weight rule on their trailing two dims (leading stacked layer/group
     dims replicate); MoE expert stacks additionally shard the expert dim
-    over the model axis."""
+    over the model axis.
+
+    Layer-STACKED norm scales (``ln*``/``*norm`` leaves, shape (L, d))
+    replicate: they are elementwise gains, not matmul faces — the planner
+    has no cuboid to cut — and sharding their feature dim re-shards every
+    activation they touch (feeding the rope miscompile the layers-level
+    constraints guard against)."""
     n_experts = cfg.moe.n_experts if getattr(cfg, "moe", None) else -1
 
-    def spec(leaf) -> P:
+    def spec(path, leaf) -> P:
         shape = tuple(leaf.shape)
         if len(shape) <= 1:
+            return P()
+        key = ""
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                key = str(entry.key)
+                break
+        if key.startswith("ln") or key.endswith("norm"):
             return P()
         if len(shape) >= 3 and shape[-3] == n_experts:
             return _expert_spec(shape, mesh)
         lead = (None,) * (len(shape) - 2)
         return P(*lead, *_weight_spec(shape[-2], shape[-1], mesh))
 
-    return jax.tree.map(spec, params)
+    return jax.tree_util.tree_map_with_path(spec, params)
 
 
 def batch_specs(cfg, mesh: Mesh, batch: Any) -> Any:
@@ -172,6 +185,31 @@ def cache_specs(cfg, mesh: Mesh, cache: Mapping[str, Any]
             entries[d] = _MODEL_AXIS
         specs[name] = P(*entries)
     return specs
+
+
+def paged_pool_specs(cfg, mesh: Mesh, pools: Mapping[str, Any]
+                     ) -> dict[str, P]:
+    """Shardings for the serve engine's KV page pools, shaped
+    (L, n_pages, page, H, dh) per leaf.
+
+    The model axis cuts the head dimension when it divides (the same head
+    cut ``cache_specs`` uses for dense decode caches); otherwise the page
+    *contents* stay whole and the physical-page dimension is left
+    unsharded — pages are gathered by block table, and cutting the pool
+    dimension would turn every gather into an all-to-all.  The dp axes
+    replicate: each data-parallel replica serves its own traffic
+    (DESIGN.md §8.3)."""
+    pm = _model_size(mesh)
+    has_model = _MODEL_AXIS in mesh.shape and pm > 1
+
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        entries: list = [None] * len(shape)
+        if has_model and len(shape) >= 2 and shape[-2] % pm == 0:
+            entries[-2] = _MODEL_AXIS   # heads (k/v pools: (L,NP,page,H,dh))
+        return P(*entries)
+
+    return {name: spec(leaf) for name, leaf in pools.items()}
 
 
 def to_named(mesh: Mesh, specs: Any) -> Any:

@@ -1,5 +1,11 @@
-from repro.kernels.attention.attention import flash_attention_pallas
-from repro.kernels.attention.ops import flash_attention
-from repro.kernels.attention.ref import attention_ref
+from repro.kernels.attention.attention import (flash_attention_pallas,
+                                               paged_flash_decode_pallas)
+from repro.kernels.attention.ops import (flash_attention, gather_kv_pages,
+                                         paged_decode_attention)
+from repro.kernels.attention.ref import attention_ref, paged_attention_ref
 
-__all__ = ["flash_attention_pallas", "flash_attention", "attention_ref"]
+__all__ = [
+    "flash_attention_pallas", "paged_flash_decode_pallas",
+    "flash_attention", "gather_kv_pages", "paged_decode_attention",
+    "attention_ref", "paged_attention_ref",
+]

@@ -108,3 +108,97 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(qf, kf, vf)
     return out.reshape(b, hq, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernel (serving): block-table-indexed KV page pool
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(lengths_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float, pps: int,
+                         page: int, window: int | None,
+                         logit_cap: float | None):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = q_ref[0, 0].astype(jnp.float32)         # (G, D)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, D)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    length = lengths_ref[b]
+    mask = pos < length
+    if window is not None:
+        mask &= pos >= (length - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, vb, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "logit_cap", "interpret"))
+def paged_flash_decode_pallas(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, block_tables: jax.Array,
+                              lengths: jax.Array, *, scale: float,
+                              window: int | None = None,
+                              logit_cap: float | None = None,
+                              interpret: bool = False) -> jax.Array:
+    """Paged single-token decode: q (B, Hkv, G, D) vs page pools
+    (n_pages, page, Hkv, D) indexed by block_tables (B, pages_per_seq).
+
+    Block tables and lengths ride scalar prefetch so the K/V BlockSpec
+    index_map can route each grid step (b, h, j) to the physical page
+    ``bt[b, j]`` — the kernel only ever DMAs the PACO leaf tiles (one
+    (page, D) face per step) that the block table maps, never a dense
+    (B, max_seq) cache.  Grid (B, Hkv, pages_per_seq); the page axis is
+    innermost so the (m, l, acc) online-softmax state stays in VMEM.
+    """
+    b, hkv, g, d = q.shape
+    pps = block_tables.shape[1]
+    page = k_pages.shape[1]
+    grid = (b, hkv, pps)
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, pps=pps,
+                          page=page, window=window, logit_cap=logit_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda b, h, j, lens, bt: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda b, h, j, lens, bt: (bt[b, j], 0, h, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda b, h, j, lens, bt: (bt[b, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda b, h, j, lens, bt: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),   # running max
+                pltpu.VMEM((g, 1), jnp.float32),   # running denom
+                pltpu.VMEM((g, d), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables, q, k_pages, v_pages)

@@ -1,15 +1,20 @@
-"""jit'd public wrapper for flash attention (model-layout adapter).
+"""jit'd public wrappers for flash + paged attention (layout adapters).
 
-Models use (B, S, H, D) layout; the kernel uses (B, H, S, D).  On real TPU
+Models use (B, S, H, D) layout; the kernels use (B, H, S, D).  On real TPU
 ``use_kernel=True`` swaps the Pallas kernel in; on CPU the chunked-jnp
-formulation in repro.models.layers.attention is the production lowering.
+formulation in repro.models.layers.attention (and the paged-gather
+formulation in ``paged_decode_attention`` below) is the production
+lowering.
 """
 from __future__ import annotations
 
-import jax
+import math
 
-from repro.kernels.attention.attention import flash_attention_pallas
-from repro.kernels.attention.ref import attention_ref
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.attention import (flash_attention_pallas,
+                                               paged_flash_decode_pallas)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -24,3 +29,61 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                logit_cap=logit_cap, bq=bq, bk=bk,
                                interpret=interpret)
     return o.transpose(0, 2, 1, 3)
+
+
+def gather_kv_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(n_pages, page, *feat) pool + (B, pages_per_seq) tables ->
+    (B, pages_per_seq * page, *feat) per-sequence contiguous cache view."""
+    b, pps = block_tables.shape
+    page = pages.shape[1]
+    return pages[block_tables].reshape(b, pps * page, *pages.shape[2:])
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           window: int | None = None,
+                           logit_cap: float | None = None,
+                           scale: float | None = None,
+                           use_kernel: bool = False,
+                           interpret: bool = False) -> jax.Array:
+    """Single-token decode against a paged KV cache.
+
+    q: (B, 1, Hq, D); k_pages/v_pages: (n_pages, page, Hkv, D);
+    block_tables: (B, pages_per_seq) int32; lengths: (B,) valid positions.
+    Returns (B, 1, Hq, D).
+
+    The jnp path gathers each sequence's pages (the paged-gather read the
+    block table schedules — bytes move once per page, the PACO leaf-tile
+    surface) and keeps the cache in its grouped Hkv layout: decode is
+    bytes-bound on the cache read, so the GQA expansion is never
+    materialized.  ``use_kernel=True`` lowers to the Pallas kernel with
+    scalar-prefetched block tables instead.
+    """
+    b, _, hq, d = q.shape
+    _, page, hkv, dhv = v_pages.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if use_kernel:
+        qk = q.reshape(b, hkv, g, d)
+        o = paged_flash_decode_pallas(
+            qk, k_pages, v_pages, block_tables, lengths, scale=scale,
+            window=window, logit_cap=logit_cap, interpret=interpret)
+        return o.reshape(b, 1, hq, dhv).astype(q.dtype)
+    k = gather_kv_pages(k_pages, block_tables)   # (B, S, Hkv, D)
+    v = gather_kv_pages(v_pages, block_tables)
+    s = k.shape[1]
+    qr = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        scores = jnp.tanh(scores / logit_cap) * logit_cap
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lengths[:, None]
+    if window is not None:
+        mask &= pos[None, :] >= (lengths[:, None] - window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dhv).astype(q.dtype)

@@ -31,3 +31,44 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", w,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        lengths: jax.Array, *,
+                        window: int | None = None,
+                        logit_cap: float | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Dense oracle for the paged-gather decode path.
+
+    q: (B, 1, Hq, D) one query token per sequence.
+    k_pages/v_pages: (n_pages, page_size, Hkv, D) physical page pools.
+    block_tables: (B, pages_per_seq) int32 page map per sequence.
+    lengths: (B,) valid cache positions per sequence -> (B, 1, Hq, D).
+
+    Materializes each sequence's full gathered cache and runs dense f32
+    softmax — the correctness anchor for ops.paged_decode_attention and
+    the Pallas kernel (tests/test_serve.py).
+    """
+    b, _, hq, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    pps = block_tables.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    # gather: (B, pages_per_seq, page, Hkv, D) -> (B, S, Hkv, D)
+    k = k_pages[block_tables].reshape(b, pps * page, hkv, d)
+    v = v_pages[block_tables].reshape(b, pps * page, hkv, d)
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    pos = jnp.arange(pps * page)
+    mask = pos[None, :] < lengths[:, None]
+    if window is not None:
+        mask &= pos[None, :] >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)

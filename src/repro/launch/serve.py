@@ -1,7 +1,11 @@
-"""Serving launcher: batched greedy decoding with continuous batching.
+"""Serving launcher: paged continuous batching, optionally model-parallel.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --requests 8 --new-tokens 16
+      --requests 16 --new-tokens 16
+
+  # sharded decode over whatever local devices exist (e.g. 8 CPU devices
+  # under XLA_FLAGS=--xla_force_host_platform_device_count=8):
+  ... --mesh 4x2
 """
 from __future__ import annotations
 
@@ -10,6 +14,7 @@ import time
 
 import jax
 
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.models import init_params
 from repro.serve import Request, ServeEngine
@@ -19,27 +24,54 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size (default: PACO leaf tile)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="page-pool size (default: slots*max_seq/page; "
+                         "smaller values exercise preemption)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="prefill chunk length (jitted tokens per call)")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL host mesh, e.g. 4x2 (default: none)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.lower().split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(params, cfg, slots=args.slots,
-                         max_seq=args.max_seq)
+                         max_seq=args.max_seq, page_size=args.page_size,
+                         pool_pages=args.pool_pages,
+                         prefill_chunk_len=args.chunk, mesh=mesh)
+    print(f"{cfg.name}: slots={args.slots} page={engine.page} "
+          f"chunk={engine.chunk} pool={engine.pool.n_pages} pages"
+          + (f" mesh={dict(mesh.shape)}" if mesh else ""))
     for i in range(args.requests):
-        engine.submit(Request(uid=i, prompt=[1 + i % 7, 2, 3],
+        engine.submit(Request(uid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
                               max_new_tokens=args.new_tokens))
     t0 = time.perf_counter()
     done = engine.run_until_drained()
     dt = time.perf_counter() - t0
+    engine.check_page_invariants()
     total = sum(len(r.out) for r in done)
+    chunk = engine.chunk
+    budget_ok = all(
+        r.prefill_calls <= (r.preemptions + 1)
+        * -(-(len(r.prompt) + len(r.out)) // chunk) for r in done)
     print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s)")
+          f"({total / dt:.1f} tok/s); prefill calls="
+          f"{engine.stats['prefill_calls']} (<=ceil(len/chunk) per admit: "
+          f"{'ok' if budget_ok else 'VIOLATED'}), decode steps="
+          f"{engine.stats['decode_steps']}, "
+          f"preemptions={engine.stats['preemptions']}")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out[:8]}")
 

@@ -1,9 +1,11 @@
 from repro.models.model import (
     init_params, forward, loss_fn, cache_spec, init_cache, decode_step,
-    prefill, param_count, active_param_count,
+    prefill, paged_cache_leaf_specs, prefill_chunk, decode_step_paged,
+    param_count, active_param_count,
 )
 
 __all__ = [
     "init_params", "forward", "loss_fn", "cache_spec", "init_cache",
-    "decode_step", "prefill", "param_count", "active_param_count",
+    "decode_step", "prefill", "paged_cache_leaf_specs", "prefill_chunk",
+    "decode_step_paged", "param_count", "active_param_count",
 ]

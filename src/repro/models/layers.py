@@ -68,14 +68,24 @@ def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
                ) -> jax.Array:
-    """x: (..., S, H, Dh); positions: (..., S)."""
+    """x: (..., S, H, Dh); positions: (..., S).
+
+    Rotation pairs (x[i], x[i + Dh/2]) — the half-split convention —
+    expressed as a reshape to (..., 2, Dh/2) + stack rather than
+    split/concatenate on the feature axis: the XLA CPU SPMD partitioner
+    miscompiles the split+concat form when the input feeds from a
+    sharded matmul (output scaled by a mesh-axis size; pinned by
+    tests/test_spmd.py::test_sharded_forward_matches_unsharded).  The
+    two forms are element-for-element identical.
+    """
     dh = x.shape[-1]
     freqs = rope_freqs(dh, theta)  # (dh/2,)
     ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # S,1,dh/2
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
-    return out.astype(x.dtype)
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], 2, dh // 2)
+    x1, x2 = xf[..., 0, :], xf[..., 1, :]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-2)
+    return out.reshape(x.shape).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -274,11 +284,19 @@ def init_gqa(key, cfg, dtype) -> Params:
 
 def gqa_qkv(p: Params, cfg, x: jax.Array, positions: jax.Array
             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    from repro.dist import act_sharding as act
+
     b, s, _ = x.shape
     dh = cfg.head_dim
     q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, dh)
     k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
     v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    # Resolve the projection's sharding to the head layout (dh replicated)
+    # BEFORE qk-norm/RoPE: rope's split+concat on a model-sharded feature
+    # dim miscompiles in the XLA CPU SPMD partitioner (values scaled by
+    # the axis size; pinned by test_spmd.test_sharded_forward_*), and the
+    # head cut is the layout attention wants anyway.
+    q, k, v = act.heads(q), act.heads(k), act.heads(v)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
@@ -321,21 +339,36 @@ def init_mla(key, cfg, dtype) -> Params:
 def mla_latents(p: Params, cfg, x: jax.Array, positions: jax.Array
                 ) -> tuple[jax.Array, jax.Array]:
     """Compressed KV latents: c_kv (B,S,kv_lora), k_rope (B,S,1,qk_rope)."""
+    from repro.dist import act_sharding as act
+
     m = cfg.mla
-    ckv_kr = x @ p["w_dkv"]
+    # feature dim resolved before the norm/rope split (see gqa_qkv); the
+    # (B, S, 1, qk_rope) rope input is additionally pinned replicated —
+    # its singleton head dim otherwise invites the partitioner into the
+    # rope-reshape miscompile the gqa path dodges.
+    ckv_kr = act.constrain(x @ p["w_dkv"], "dp", None, None)
     c_kv = rms_norm(ckv_kr[..., : m.kv_lora], p["kv_norm"])
-    k_rope = apply_rope(ckv_kr[..., m.kv_lora:][:, :, None, :], positions,
-                        cfg.rope_theta)
-    return c_kv, k_rope
+    k_rope = apply_rope(
+        act.constrain(ckv_kr[..., m.kv_lora:][:, :, None, :],
+                      "dp", None, None, None),
+        positions, cfg.rope_theta)
+    # pin the OUTPUT as well: consumers (the k_cat concat in apply_mla)
+    # otherwise propagate a head/feature sharding backward into rope's
+    # interior and re-trigger the partitioner miscompile.
+    return c_kv, act.constrain(k_rope, "dp", None, None, None)
 
 
 def mla_queries(p: Params, cfg, x: jax.Array, positions: jax.Array
                 ) -> tuple[jax.Array, jax.Array]:
+    from repro.dist import act_sharding as act
+
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
     q = rms_norm(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
-    q = q.reshape(b, s, h, m.qk_nope + m.qk_rope)
+    # heads cut, per-head feature dim replicated, before the rope split
+    # (see gqa_qkv)
+    q = act.heads(q.reshape(b, s, h, m.qk_nope + m.qk_rope))
     q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     return q_nope, q_rope

@@ -155,6 +155,40 @@ def prefill(params: Params, cfg: ArchConfig, batch: dict, max_seq: int):
     raise ValueError(cfg.family)
 
 
+# ---------------------------------------------------------------------------
+# Paged serving interface (repro.serve engine; PACO-paged KV pool)
+# ---------------------------------------------------------------------------
+
+def paged_cache_leaf_specs(cfg: ArchConfig, page_size: int) -> dict:
+    """Per-leaf shape of ONE layer-stacked KV page; the serve engine's
+    page pool adds the physical-page dimension (serve.paging.init_pool)."""
+    if cfg.family == "decoder":
+        return TF.paged_cache_leaf_specs(cfg, page_size)
+    raise NotImplementedError(
+        f"paged serving implemented for decoder family (got {cfg.family}); "
+        "ssm/hybrid/encdec paged state is an open item (ROADMAP)")
+
+
+def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                  start: jax.Array, pages: Params, block_row: jax.Array
+                  ) -> tuple[jax.Array, Params]:
+    """One page-aligned prompt chunk for one slot -> (chunk logits, pages)."""
+    if cfg.family == "decoder":
+        return TF.prefill_chunk_decoder(params, cfg, tokens, start, pages,
+                                        block_row)
+    raise NotImplementedError(cfg.family)
+
+
+def decode_step_paged(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                      pages: Params, block_tables: jax.Array,
+                      lengths: jax.Array) -> tuple[jax.Array, Params]:
+    """One fused decode tick over all slots -> (logits (B, V), pages)."""
+    if cfg.family == "decoder":
+        return TF.decode_step_paged_decoder(params, cfg, tokens, pages,
+                                            block_tables, lengths)
+    raise NotImplementedError(cfg.family)
+
+
 def param_count(params: Params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
 

@@ -274,3 +274,141 @@ def decode_step_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
         L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
         cfg.vocab)
     return logits[:, 0], new_cache, lengths + 1
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: chunked prefill + fused paged decode (repro.serve engine)
+# ---------------------------------------------------------------------------
+
+def paged_cache_leaf_specs(cfg: ArchConfig, page_size: int
+                           ) -> dict[str, jax.ShapeDtypeStruct]:
+    """Shape of ONE KV page, layer-stacked: (L, page, Hkv, dh) per leaf.
+    repro.serve.paging.init_pool adds the physical-page pool dimension."""
+    if cfg.attn != "gqa":
+        raise NotImplementedError(
+            "paged serving covers GQA decoders; MLA latent paging is an "
+            "open item (ROADMAP)")
+    shape = (cfg.n_layers, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+            "v": jax.ShapeDtypeStruct(shape, cfg.dtype)}
+
+
+def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
+                          tokens: jax.Array, start: jax.Array,
+                          pages: Params, block_row: jax.Array
+                          ) -> tuple[jax.Array, Params]:
+    """One prompt chunk for ONE slot: tokens (1, C) at positions
+    [start, start+C), written into the slot's pages via ``block_row``.
+
+    Chunks are page-aligned (C a multiple of page_size, start a multiple
+    of C), so each chunk writes C/page_size WHOLE pages — a scatter of
+    PACO leaf tiles, no read-modify-write.  Returns (logits (C, V) for
+    every chunk position, updated pages); the engine issues exactly
+    ceil(prompt_len / C) of these jitted calls per admitted request
+    (the per-token teacher-forcing loop this replaces issued prompt_len).
+    """
+    from repro.kernels.attention import ops as A
+
+    b, c = tokens.shape
+    lyr, n_pool, page, hkv, dh = pages["k"].shape
+    assert c % page == 0, (c, page)
+    pps = block_row.shape[0]
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)
+    x = act.batch_seq(x)
+    positions = start + jnp.arange(c)
+    k_positions = jnp.arange(pps * page)
+    windows = _layer_windows(cfg, cfg.n_layers)
+    # pages this chunk fills: block_row[start/page : start/page + C/page]
+    page_ids = jax.lax.dynamic_slice(block_row, (start // page,),
+                                     (c // page,))
+
+    def body(x, inp):
+        blk, window, k_l, v_l = inp
+        h = L.rms_norm(x, blk["ln1"])
+        q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
+        k_l = k_l.at[page_ids].set(kk.reshape(c // page, page, hkv, dh))
+        v_l = v_l.at[page_ids].set(v.reshape(c // page, page, hkv, dh))
+        # gather the slot's whole context (past pages + this chunk) and
+        # attend causally; unwritten/future positions are masked by the
+        # causal rule (k_pos > q_pos), stale page contents included.
+        k_ctx = A.gather_kv_pages(k_l, block_row[None])
+        v_ctx = A.gather_kv_pages(v_l, block_row[None])
+        o = L.attention(q, k_ctx, v_ctx, q_positions=positions,
+                        k_positions=k_positions, causal=True,
+                        window=window, logit_cap=cfg.softcap_attn,
+                        q_chunk=cfg.q_chunk)
+        a = o.reshape(b, c, -1) @ blk["attn"]["wo"]
+        if "ln1_post" in blk:
+            a = L.rms_norm(a, blk["ln1_post"])
+        x = x + a
+        h = L.rms_norm(x, blk["ln2"])
+        f = (M.apply_moe(blk["mlp"], cfg, h) if cfg.moe
+             else L.apply_mlp(blk["mlp"], cfg, h))
+        if "ln2_post" in blk:
+            f = L.rms_norm(f, blk["ln2_post"])
+        return act.residual(x + f), (k_l, v_l)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["blocks"], windows, pages["k"], pages["v"]),
+        unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.mask_vocab(
+        L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
+        cfg.vocab)
+    return logits[0], {"k": k_pages, "v": v_pages}
+
+
+def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
+                              tokens: jax.Array, pages: Params,
+                              block_tables: jax.Array, lengths: jax.Array
+                              ) -> tuple[jax.Array, Params]:
+    """Fused decode over every slot against the shared page pool.
+
+    tokens (B, 1); block_tables (B, pages_per_seq); lengths (B,) current
+    context length per slot (the new token lands at position lengths).
+    Inactive slots ride along pointed at the pool's null page — no
+    per-slot Python, one compiled step per tick.  Returns
+    (logits (B, V), updated pages).
+    """
+    from repro.kernels.attention import ops as A
+
+    b = tokens.shape[0]
+    lyr, n_pool, page, hkv, dh = pages["k"].shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)  # (B,1,D)
+    positions = lengths
+    windows = _layer_windows(cfg, cfg.n_layers)
+    write_page = block_tables[jnp.arange(b), lengths // page]  # (B,)
+    write_off = lengths % page
+
+    def body(x, inp):
+        blk, window, k_l, v_l = inp
+        h = L.rms_norm(x, blk["ln1"])
+        q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions[:, None])
+        k_l = k_l.at[write_page, write_off].set(kk[:, 0])
+        v_l = v_l.at[write_page, write_off].set(v[:, 0])
+        o = A.paged_decode_attention(q, k_l, v_l, block_tables,
+                                     lengths + 1, window=window,
+                                     logit_cap=cfg.softcap_attn)
+        a = o.reshape(b, 1, -1) @ blk["attn"]["wo"]
+        if "ln1_post" in blk:
+            a = L.rms_norm(a, blk["ln1_post"])
+        x = x + a
+        h = L.rms_norm(x, blk["ln2"])
+        f = (M.apply_moe(blk["mlp"], cfg, h) if cfg.moe
+             else L.apply_mlp(blk["mlp"], cfg, h))
+        if "ln2_post" in blk:
+            f = L.rms_norm(f, blk["ln2_post"])
+        return x + f, (k_l, v_l)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["blocks"], windows, pages["k"], pages["v"]),
+        unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.mask_vocab(
+        L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
+        cfg.vocab)
+    return logits[:, 0], {"k": k_pages, "v": v_pages}

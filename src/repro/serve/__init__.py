@@ -1,3 +1,6 @@
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.paging import BlockTables, PagePool, paco_page_size
+from repro.serve.reference import reference_decode
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "BlockTables", "PagePool",
+           "paco_page_size", "reference_decode"]

@@ -1,21 +1,36 @@
-"""Batched serving engine: continuous batching over fixed decode slots.
+"""Continuous-batching serving engine over a PACO-paged KV cache.
 
-Requests queue up; free slots are filled via prefill; one fused decode_step
-advances every active slot per tick (the production serve_step lowered by
-the dry-run).  Slot state (KV cache rows / SSM states, lengths) lives in
-fixed-shape device arrays so the step compiles once.
+Production shape (DESIGN.md §8): requests queue up; a scheduler admits
+them into fixed decode slots, prefills their prompts in page-aligned
+chunks (one jitted ``prefill_chunk`` call per chunk — NOT one per token),
+and a single fused ``decode_step_paged`` advances every active slot per
+tick.  KV lives in a shared pool of fixed-size pages (leaf tiles of the
+slots x seq x head_dim cuboid, ``paging.paco_page_size``) mapped through
+per-slot block tables; retirement frees pages back to the pool, and pool
+exhaustion preempts the youngest request (its pages freed, the request
+re-queued to resume with identical output).
+
+With ``mesh=...`` the engine serves model-parallel: params are placed by
+``dist.sharding.param_specs``, page pools by
+``dist.sharding.paged_pool_specs``, and both steps are traced under
+``dist.act_sharding.use_mesh_rules`` so the planner's activation cuts
+apply on any device count.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import decode_step, init_cache
+from repro.models import decode_step_paged, paged_cache_leaf_specs, \
+    prefill_chunk
+from repro.serve import paging
 
 Params = Any
 
@@ -27,78 +42,239 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1  # -1 = never
     out: list[int] = dataclasses.field(default_factory=list)
+    # instrumentation (tests + launch report)
+    prefill_calls: int = 0
+    preemptions: int = 0
 
 
 class ServeEngine:
+    """Paged continuous-batching engine (decoder-family archs)."""
+
     def __init__(self, params: Params, cfg: ArchConfig, *, slots: int = 4,
-                 max_seq: int = 128):
-        self.params = params
+                 max_seq: int = 128, page_size: int | None = None,
+                 pool_pages: int | None = None,
+                 prefill_chunk_len: int | None = None, mesh=None):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
-        self.cache = init_cache(cfg, slots, max_seq)
-        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.page = page_size or paging.paco_page_size(
+            slots, max_seq, cfg.head_dim)
+        assert max_seq % self.page == 0, (max_seq, self.page)
+        self.pages_per_seq = max_seq // self.page
+        # chunk: a few pages per jitted prefill call, dividing max_seq so
+        # padded chunks never overrun the block table.
+        if prefill_chunk_len is None:
+            prefill_chunk_len = self.page
+            while (prefill_chunk_len * 2 <= min(64, max_seq)
+                   and max_seq % (prefill_chunk_len * 2) == 0):
+                prefill_chunk_len *= 2
+        assert prefill_chunk_len % self.page == 0
+        assert max_seq % prefill_chunk_len == 0
+        self.chunk = prefill_chunk_len
+        n_pages = (pool_pages if pool_pages is not None
+                   else slots * self.pages_per_seq)
+        assert n_pages >= self.pages_per_seq, \
+            "pool must hold at least one full sequence"
+        self.pool = paging.init_pool(
+            paged_cache_leaf_specs(cfg, self.page), n_pages, self.page)
+        self.tables = paging.BlockTables(slots, self.pages_per_seq,
+                                         self.pool.null_page)
+
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.dist import sharding as D
+            params = jax.device_put(
+                params, D.to_named(mesh, D.param_specs(cfg, params, mesh)))
+            self.pool.pools = jax.device_put(
+                self.pool.pools,
+                D.to_named(mesh, D.paged_pool_specs(cfg, mesh,
+                                                    self.pool.pools)))
+        self.params = params
+
         self.active: list[Request | None] = [None] * slots
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
-        self._last_tok = jnp.zeros((slots, 1), jnp.int32)
-        self._step = jax.jit(
-            lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+        # host-authoritative per-slot state: number of cache positions
+        # written, last emitted token (its KV lands on the next tick),
+        # admission order (preemption victims are the youngest).
+        self._ctx_len = [0] * slots
+        self._last_tok = [0] * slots
+        self._admit_order = [-1] * slots
+        self._admit_seq = 0
+        self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "preemptions": 0, "retired": 0}
+
+        self._prefill = jax.jit(
+            lambda p, t, s, pg, row: prefill_chunk(p, cfg, t, s, pg, row))
+        self._decode = jax.jit(
+            lambda p, t, pg, bt, ln: decode_step_paged(p, cfg, t, pg, bt,
+                                                       ln))
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _mesh_cm(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.dist import act_sharding
+        return act_sharding.use_mesh_rules(self.mesh)
 
     def submit(self, req: Request) -> None:
+        if not (1 <= len(req.prompt) < self.max_seq):
+            raise ValueError(
+                f"prompt length {len(req.prompt)} must be in "
+                f"[1, max_seq={self.max_seq})")
+        if req.max_new_tokens < 1:
+            # prefill always emits one token; a zero budget would diverge
+            # from reference_decode (which generates nothing)
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{req.max_new_tokens}")
         self.queue.append(req)
 
+    def _emit(self, req: Request, tok: int) -> bool:
+        """Record a generated token; True when the request retires (eos,
+        token budget, or context hitting max_seq — truncation)."""
+        req.out.append(tok)
+        return (len(req.out) >= req.max_new_tokens or tok == req.eos_id
+                or len(req.prompt) + len(req.out) >= self.max_seq)
+
+    def _release_slot(self, slot: int) -> None:
+        self.pool.release(self.tables.clear(slot))
+        self.active[slot] = None
+        self._ctx_len[slot] = 0
+        self._last_tok[slot] = 0
+        self._admit_order[slot] = -1
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        self._release_slot(slot)
+        self.done.append(req)
+        self.stats["retired"] += 1
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a slot: pages freed, request re-queued FIRST so it resumes
+        (prompt + generated so far re-prefilled) with identical output."""
+        req = self.active[slot]
+        self._release_slot(slot)
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.queue.appendleft(req)
+
+    def _youngest_active(self) -> int:
+        return max((s for s in range(self.slots)
+                    if self.active[s] is not None),
+                   key=lambda s: self._admit_order[s])
+
+    # -- scheduler ----------------------------------------------------------
+
     def _admit(self) -> None:
+        """Fill free slots from the queue head (FIFO).  Admission needs
+        pages for every padded prefill chunk up front; if the pool can't
+        supply them the queue waits (decode-time exhaustion, not
+        admission, triggers preemption)."""
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.popleft()
-                self.active[slot] = req
-                # prefill by teacher-forcing the prompt through decode steps
-                # (slot-local; cache rows for other slots are untouched)
-                self.lengths = self.lengths.at[slot].set(0)
-                for tok in req.prompt[:-1]:
-                    self._decode_one_slot(slot, tok)
-                self._last_tok = self._last_tok.at[slot, 0].set(
-                    req.prompt[-1])
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            ctx = req.prompt + req.out
+            n_chunks = -(-len(ctx) // self.chunk)
+            got = self.pool.alloc(n_chunks * (self.chunk // self.page))
+            if got is None:
+                break
+            self.queue.popleft()
+            self.tables.assign(slot, 0, got)
+            self.active[slot] = req
+            self._admit_order[slot] = self._admit_seq
+            self._admit_seq += 1
+            self._prefill_slot(slot, req, ctx)
 
-    def _decode_one_slot(self, slot: int, tok: int) -> None:
-        toks = self._last_tok.at[slot, 0].set(tok)
-        logits, cache, lengths = self._step(self.params, toks, self.cache,
-                                            self.lengths)
-        # commit only this slot's cache rows / length
-        def commit(new, old):
-            if new.ndim >= 2 and new.shape[1] == self.slots:
-                return old.at[:, slot].set(new[:, slot])
-            return old
+    def _prefill_slot(self, slot: int, req: Request,
+                      ctx: list[int]) -> None:
+        """Chunked prefill: ceil(len(ctx)/chunk) jitted calls, each
+        ingesting a whole page-aligned chunk (the per-token teacher-forced
+        loop this replaces cost len(ctx) device round-trips)."""
+        row = self.tables.row_device(slot)
+        logits = None
+        with self._mesh_cm():
+            for i in range(0, len(ctx), self.chunk):
+                toks = ctx[i:i + self.chunk]
+                toks = toks + [0] * (self.chunk - len(toks))
+                logits, self.pool.pools = self._prefill(
+                    self.params, jnp.asarray([toks], jnp.int32),
+                    jnp.asarray(i, jnp.int32), self.pool.pools, row)
+                req.prefill_calls += 1
+                self.stats["prefill_calls"] += 1
+        last = (len(ctx) - 1) % self.chunk
+        tok = int(jnp.argmax(logits[last]))
+        self._ctx_len[slot] = len(ctx)
+        self._last_tok[slot] = tok
+        if self._emit(req, tok):
+            self._retire(slot)
 
-        self.cache = jax.tree.map(commit, cache, self.cache)
-        self.lengths = self.lengths.at[slot].set(lengths[slot])
+    def _ensure_decode_pages(self) -> None:
+        """Every active slot needs a mapped page for its next write
+        position; exhaustion preempts the youngest active request until
+        the allocation succeeds (oldest-first service order)."""
+        order = sorted((s for s in range(self.slots)
+                        if self.active[s] is not None),
+                       key=lambda s: self._admit_order[s])
+        for slot in order:
+            if self.active[slot] is None:   # preempted below
+                continue
+            idx = self._ctx_len[slot] // self.page
+            if self.tables.row(slot)[idx] != self.tables.null_page:
+                continue
+            while True:
+                got = self.pool.alloc(1)
+                if got is not None:
+                    self.tables.assign(slot, idx, got)
+                    break
+                victim = self._youngest_active()
+                self._preempt(victim)
+                if victim == slot:
+                    break
 
     def tick(self) -> int:
-        """One decode step for all active slots; returns #finished."""
+        """Admit + one fused decode step for all slots; returns #retired."""
         self._admit()
         if all(r is None for r in self.active):
             return 0
-        logits, self.cache, self.lengths = self._step(
-            self.params, self._last_tok, self.cache, self.lengths)
-        nxt = jnp.argmax(logits, axis=-1)  # greedy
+        self._ensure_decode_pages()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self._last_tok, jnp.int32)[:, None]
+        lens = jnp.asarray(self._ctx_len, jnp.int32)
+        with self._mesh_cm():
+            logits, self.pool.pools = self._decode(
+                self.params, toks, self.pool.pools, self.tables.device(),
+                lens)
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
         finished = 0
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
+        for slot in live:
+            req = self.active[slot]
+            self._ctx_len[slot] += 1   # last_tok's KV was just written
             tok = int(nxt[slot])
-            req.out.append(tok)
-            self._last_tok = self._last_tok.at[slot, 0].set(tok)
-            if (len(req.out) >= req.max_new_tokens or tok == req.eos_id
-                    or int(self.lengths[slot]) >= self.max_seq - 1):
-                self.done.append(req)
-                self.active[slot] = None
+            self._last_tok[slot] = tok
+            if self._emit(req, tok):
+                self._retire(slot)
                 finished += 1
         return finished
 
-    def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
         for _ in range(max_ticks):
             if not self.queue and all(r is None for r in self.active):
                 break
             self.tick()
         return self.done
+
+    # -- test/debug surface -------------------------------------------------
+
+    def check_page_invariants(self) -> None:
+        """Block-table/pool invariants (tests/test_serve.py): live rows
+        disjoint, live pages off the free list, live + free == pool."""
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        self.tables.check_invariants(self.pool, live)
+        n_live = sum(len(self.tables.live_pages(s)) for s in live)
+        assert n_live + self.pool.free_count() == self.pool.n_pages, \
+            (n_live, self.pool.free_count(), self.pool.n_pages)

@@ -1,0 +1,160 @@
+"""PACO-paged KV cache: fixed-size pages in a pool + per-slot block tables.
+
+The KV cache of a serving engine is the cuboid (slots x seq x head_dim).
+Instead of a dense (slots, max_seq, ...) block per slot, the pool holds
+fixed-size *pages* of ``page_size`` consecutive sequence positions, and
+each slot owns a *block table* mapping its logical position range to
+physical pages.  The page size is chosen as the sequence extent of a PACO
+1-piece leaf tile of that cuboid (``paco_page_size``): the same
+longest-dim cut schedule that balances matmul cuboids balances the page
+pool across an arbitrary (even prime) number of slots, and the leaf's
+surface-minimizing shape keeps each page's bytes-per-gather low
+(DESIGN.md §8.1).
+
+One reserved *null page* (index ``pool.null_page``) absorbs writes from
+inactive decode slots so the fused decode step never branches on
+activity; its contents are never read by a live slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cuboid
+
+
+def paco_page_size(slots: int, max_seq: int, head_dim: int, *,
+                   pages_per_slot: int = 8) -> int:
+    """Sequence extent of a PACO 1-piece leaf tile of the KV cuboid.
+
+    Plans the (slots x max_seq x head_dim) cuboid for ``slots *
+    pages_per_slot`` leaves with ``core.cuboid.plan_mm_1piece`` — the
+    longest-dim cut schedule lands most cuts on the (dominant) sequence
+    axis — and takes the smallest resulting sequence extent, rounded
+    down to the largest power-of-two divisor of ``max_seq`` so block
+    tables stay rectangular.
+    """
+    if max_seq < 2:
+        return 1
+    p = max(2, slots * pages_per_slot)
+    plan = cuboid.plan_mm_1piece(max(slots, 1), max_seq, max(head_dim, 1), p)
+    seq_extent = min((c.m for _, c in plan.tiles if c.m > 0),
+                     default=max_seq)
+    page = 1
+    while page * 2 <= seq_extent and max_seq % (page * 2) == 0:
+        page *= 2
+    return page
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Fixed pool of KV pages plus the host-side free list.
+
+    ``pools`` maps each cache leaf name (e.g. "k", "v") to an array of
+    shape (layers, n_pages + 1, page_size, *feature_dims); physical page
+    ``n_pages`` is the reserved null page.
+    """
+
+    pools: dict[str, jax.Array]
+    page_size: int
+    n_pages: int
+    free: list[int]
+
+    @property
+    def null_page(self) -> int:
+        return self.n_pages
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages from the free list; None (no change) if short."""
+        if n > len(self.free):
+            return None
+        taken, self.free = self.free[:n], self.free[n:]
+        return taken
+
+    def release(self, pages: list[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages, p
+            assert p not in self.free, f"double free of page {p}"
+        self.free.extend(pages)
+
+    def free_count(self) -> int:
+        return len(self.free)
+
+
+def init_pool(cache_leaf_specs: dict[str, jax.ShapeDtypeStruct],
+              n_pages: int, page_size: int) -> PagePool:
+    """Allocate pools from per-leaf specs shaped (L, page_size, *feat).
+
+    The specs describe ONE page (layer-stacked); the pool adds the
+    physical-page dimension after the layer dim, plus the null page.
+    """
+    pools = {}
+    for name, spec in cache_leaf_specs.items():
+        lyr, pg, *feat = spec.shape
+        assert pg == page_size, (name, spec.shape, page_size)
+        pools[name] = jnp.zeros((lyr, n_pages + 1, page_size, *feat),
+                                spec.dtype)
+    return PagePool(pools=pools, page_size=page_size, n_pages=n_pages,
+                    free=list(range(n_pages)))
+
+
+class BlockTables:
+    """Per-slot page maps: host-authoritative numpy, device view on demand.
+
+    Row ``s`` maps slot ``s``'s logical positions ``[i*page_size,
+    (i+1)*page_size)`` to physical page ``table[s, i]``; unmapped entries
+    point at the null page.
+    """
+
+    def __init__(self, slots: int, pages_per_seq: int, null_page: int):
+        self.null_page = null_page
+        self._np = np.full((slots, pages_per_seq), null_page, np.int32)
+        self._dev: jax.Array | None = None
+
+    def assign(self, slot: int, first: int, pages: list[int]) -> None:
+        self._np[slot, first:first + len(pages)] = pages
+        self._dev = None
+
+    def clear(self, slot: int) -> list[int]:
+        """Reset a slot's row to the null page; returns the freed pages."""
+        row = self._np[slot]
+        pages = [int(p) for p in row if p != self.null_page]
+        row[:] = self.null_page
+        self._dev = None
+        return pages
+
+    def row(self, slot: int) -> np.ndarray:
+        return self._np[slot]
+
+    def row_device(self, slot: int) -> jax.Array:
+        return jnp.asarray(self._np[slot])
+
+    def device(self) -> jax.Array:
+        if self._dev is None:
+            self._dev = jnp.asarray(self._np)
+        return self._dev
+
+    def live_pages(self, slot: int) -> list[int]:
+        return [int(p) for p in self._np[slot] if p != self.null_page]
+
+    def check_invariants(self, pool: PagePool,
+                         live_slots: list[int]) -> None:
+        """Paging invariants (exercised by tests/test_serve.py):
+        no physical page is mapped by two live slots, no live slot maps a
+        free page, and live + free page counts never exceed the pool."""
+        seen: dict[int, int] = {}
+        free = set(pool.free)
+        assert len(free) == len(pool.free), "free list has duplicates"
+        n_live = 0
+        for s in live_slots:
+            for p in self.live_pages(s):
+                assert p not in seen, \
+                    f"page {p} shared by live slots {seen[p]} and {s}"
+                assert p not in free, f"live page {p} is on the free list"
+                seen[p] = s
+                n_live += 1
+        assert n_live + len(free) <= pool.n_pages

@@ -10,6 +10,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_arch
@@ -112,6 +113,7 @@ def test_param_specs_expert_stacks():
 # 8-device subprocess: real mesh, real device_put
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_param_specs_cut_tree_on_host_mesh():
     body = """
         import jax, numpy as np

@@ -5,6 +5,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 from repro.dist.pipeline import stage_ranges
 
 ENV = dict(os.environ,
@@ -22,6 +24,7 @@ def test_stage_ranges_cover_any_split():
             assert max(sizes) - min(sizes) <= 1  # PACO balance
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     body = """
         import jax, jax.numpy as jnp, numpy as np

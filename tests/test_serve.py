@@ -1,0 +1,376 @@
+"""Serving-engine parity/property suite (ISSUE 2 headline satellite).
+
+(a) PARITY — every request served by the paged continuous-batching engine
+    must emit tokens bit-identical to a single-request reference decode
+    (dense re-forward per token through kernels/attention/ref.py), across
+    unequal prompt lengths, eos early-exit, max-seq truncation, arrival
+    mid-flight, and preemption/resume.
+(b) PAGING — block-table invariants: no page shared across live slots,
+    freed pages return to the pool, preempted requests resume with
+    identical output, prefill issues exactly ceil(ctx/chunk) jitted calls
+    per admission.
+(c) PROPERTY — hypothesis-driven random prompt batches and random
+    slot/page/pool geometry (primes included) via the optional-hypothesis
+    shim (skips cleanly when hypothesis is absent).
+
+Plus the paged-attention kernel oracle checks and the regression pin for
+the old dense-engine cache-commit heuristic.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_arch
+from repro.kernels.attention import (paged_attention_ref,
+                                     paged_decode_attention)
+from repro.models import init_params
+from repro.serve import Request, ServeEngine, paco_page_size, \
+    reference_decode
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    """Reduced qwen3 with UNTIED embeddings: with tied embeddings a
+    random-init decoder degenerately echoes its last token (logits ~
+    x @ embed.T), which would let a broken cache path pass parity."""
+    return dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                               tie_embeddings=False)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return _cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, KEY)
+
+
+def _ref(params, cfg, req: Request, max_seq: int) -> list[int]:
+    return reference_decode(params, cfg, req.prompt,
+                            max_new_tokens=req.max_new_tokens,
+                            eos_id=req.eos_id, max_seq=max_seq)
+
+
+def _assert_parity(engine: ServeEngine, params, cfg, done) -> None:
+    assert done, "engine drained nothing"
+    for r in sorted(done, key=lambda r: r.uid):
+        ref = _ref(params, cfg, r, engine.max_seq)
+        assert r.out == ref, (
+            f"req {r.uid} (prompt {r.prompt}, preemptions "
+            f"{r.preemptions}): engine {r.out} != reference {ref}")
+
+
+# ---------------------------------------------------------------------------
+# (a) parity
+# ---------------------------------------------------------------------------
+
+def test_parity_unequal_prompts(params, cfg):
+    """Prompts of different lengths sharing slots + page pool; more
+    requests than slots so admission waits mid-flight."""
+    eng = ServeEngine(params, cfg, slots=3, max_seq=64,
+                      prefill_chunk_len=8)
+    prompts = [[1, 2, 3], [5, 6, 7, 8, 9, 10, 11], [3, 1], [9] * 12,
+               [2, 4, 6, 8], [13]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+    done = eng.run_until_drained()
+    assert len(done) == len(prompts)
+    eng.check_page_invariants()
+    _assert_parity(eng, params, cfg, done)
+
+
+def test_parity_eos_early_exit(params, cfg):
+    """eos_id chosen from the reference output so it actually fires;
+    the engine must stop at exactly the same position."""
+    base = Request(uid=0, prompt=[4, 2, 9], max_new_tokens=10)
+    ref_free = reference_decode(params, cfg, base.prompt,
+                                max_new_tokens=10, max_seq=64)
+    eos = ref_free[2]   # third generated token becomes eos
+    eng = ServeEngine(params, cfg, slots=2, max_seq=64)
+    eng.submit(Request(uid=0, prompt=[4, 2, 9], max_new_tokens=10,
+                       eos_id=eos))
+    eng.submit(Request(uid=1, prompt=[7, 7], max_new_tokens=10,
+                       eos_id=eos))
+    done = eng.run_until_drained()
+    _assert_parity(eng, params, cfg, done)
+    r0 = next(r for r in done if r.uid == 0)
+    assert r0.out[-1] == eos and len(r0.out) <= 3
+
+
+def test_parity_eos_at_prefill(params, cfg):
+    """eos as the FIRST generated token (emitted by prefill itself):
+    the request must retire without ever entering a decode tick."""
+    ref = reference_decode(params, cfg, [4, 2, 9], max_new_tokens=10,
+                           max_seq=64)
+    eng = ServeEngine(params, cfg, slots=2, max_seq=64)
+    eng.submit(Request(uid=0, prompt=[4, 2, 9], max_new_tokens=10,
+                       eos_id=ref[0]))
+    done = eng.run_until_drained()
+    assert done[0].out == [ref[0]]
+    assert eng.stats["decode_steps"] == 0
+    eng.check_page_invariants()
+
+
+def test_parity_max_seq_truncation(params, cfg):
+    """prompt + budget overruns max_seq: generation truncates when the
+    context fills, identically to the reference."""
+    eng = ServeEngine(params, cfg, slots=2, max_seq=16, page_size=4)
+    eng.submit(Request(uid=0, prompt=list(range(1, 11)),
+                       max_new_tokens=50))
+    eng.submit(Request(uid=1, prompt=[3, 5], max_new_tokens=50))
+    done = eng.run_until_drained()
+    _assert_parity(eng, params, cfg, done)
+    r0 = next(r for r in done if r.uid == 0)
+    assert len(r0.prompt) + len(r0.out) == 16   # truncated at max_seq
+
+
+def test_parity_arrival_mid_flight(params, cfg):
+    """Requests submitted while others are mid-decode join via
+    continuous batching without disturbing in-flight outputs."""
+    eng = ServeEngine(params, cfg, slots=2, max_seq=64,
+                      prefill_chunk_len=8)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=12))
+    eng.submit(Request(uid=1, prompt=[9, 8], max_new_tokens=12))
+    for _ in range(4):
+        eng.tick()
+    eng.submit(Request(uid=2, prompt=[5, 5, 5, 5, 5], max_new_tokens=12))
+    eng.submit(Request(uid=3, prompt=[2] * 9, max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 4
+    _assert_parity(eng, params, cfg, done)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "olmoe-1b-7b"])
+def test_parity_window_softcap_moe_archs(arch):
+    """End-to-end parity beyond plain GQA: gemma2 (alternating local
+    sliding windows + attn/logit softcaps + post-norms) and olmoe (MoE
+    mlp in the decode scan).  Prompts long enough that the context
+    exceeds the reduced local_window (16), so the traced per-layer
+    window actually masks."""
+    cfg = dataclasses.replace(get_arch(arch).reduced(),
+                              tie_embeddings=False)
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(params, cfg, slots=3, max_seq=64,
+                      prefill_chunk_len=16)
+    prompts = [list(range(1, 25)), [5, 9, 2], [7] * 20, [3, 1, 4, 1, 5]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+    done = eng.run_until_drained()
+    assert len(done) == len(prompts)
+    eng.check_page_invariants()
+    _assert_parity(eng, params, cfg, done)
+
+
+def test_submit_rejects_invalid_requests(params, cfg):
+    """Zero/negative token budgets are rejected up front: prefill always
+    emits one token, so admitting them would diverge from the reference
+    (which generates nothing)."""
+    eng = ServeEngine(params, cfg, slots=1, max_seq=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=[1], max_new_tokens=0))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=1, prompt=[], max_new_tokens=4))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=2, prompt=[1] * 16, max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# (b) paging
+# ---------------------------------------------------------------------------
+
+def test_block_tables_disjoint_while_live(params, cfg):
+    eng = ServeEngine(params, cfg, slots=4, max_seq=32, page_size=4)
+    for i in range(6):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
+                           max_new_tokens=10))
+    while eng.queue or any(eng.active):
+        eng.tick()
+        eng.check_page_invariants()   # after every tick, not just at end
+    assert eng.pool.free_count() == eng.pool.n_pages
+
+
+def test_pages_freed_on_retirement(params, cfg):
+    eng = ServeEngine(params, cfg, slots=2, max_seq=32)
+    eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    assert eng.pool.free_count() == eng.pool.n_pages
+    assert eng.tables.live_pages(0) == []
+
+
+def test_preemption_resumes_identically(params, cfg):
+    """Pool too small for two full-length sequences: the youngest request
+    is evicted mid-decode, re-queued, re-prefilled (prompt + generated),
+    and still emits the exact reference continuation."""
+    eng = ServeEngine(params, cfg, slots=2, max_seq=32, page_size=4,
+                      pool_pages=10, prefill_chunk_len=8)
+    for i, p in enumerate([[1, 2, 3, 4, 5], [7, 8, 9], [11, 12]]):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=20))
+    done = eng.run_until_drained()
+    assert eng.stats["preemptions"] >= 1
+    assert any(r.preemptions > 0 for r in done)
+    eng.check_page_invariants()
+    assert eng.pool.free_count() == eng.pool.n_pages
+    _assert_parity(eng, params, cfg, done)
+
+
+def test_prefill_call_budget(params, cfg):
+    """Chunked prefill: exactly ceil(ctx/chunk) jitted calls per
+    admission — the O(prompt_len)-round-trips regression guard."""
+    eng = ServeEngine(params, cfg, slots=2, max_seq=64,
+                      prefill_chunk_len=8)
+    prompts = [[1], [2] * 8, [3] * 9, [4] * 17]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert eng.stats["preemptions"] == 0
+    for r in done:
+        assert r.prefill_calls == -(-len(r.prompt) // 8), \
+            (r.uid, r.prefill_calls)
+
+
+def test_paco_page_size_properties():
+    """Page size is a PACO leaf-tile seq extent: divides max_seq, shrinks
+    with more slots (the cuboid's non-seq faces absorb cuts), and stays
+    sane on prime slot counts."""
+    for slots in (1, 2, 3, 4, 7, 13):
+        for max_seq in (16, 128, 512):
+            page = paco_page_size(slots, max_seq, 64)
+            assert 1 <= page <= max_seq and max_seq % page == 0, \
+                (slots, max_seq, page)
+
+
+# ---------------------------------------------------------------------------
+# paged-attention kernel parity (jnp production path + Pallas interpret)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {}, {"window": 6}, {"logit_cap": 20.0},
+    {"window": 3, "logit_cap": 5.0},
+])
+def test_paged_decode_matches_dense_ref(kw):
+    b, hq, hkv, d, page, n_pages, pps = 3, 4, 2, 16, 4, 13, 4
+    q = jax.random.normal(KEY, (b, 1, hq, d))
+    kp = jax.random.normal(jax.random.PRNGKey(1), (n_pages, page, hkv, d))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (n_pages, page, hkv, d))
+    bt = jnp.asarray(np.array([[0, 3, 5, 7], [1, 2, 4, 6],
+                               [8, 9, 10, 11]], np.int32))
+    lens = jnp.asarray([5, 16, 1], jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, bt, lens, **kw)
+    out = paged_decode_attention(q, kp, vp, bt, lens, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+    pal = paged_decode_attention(q, kp, vp, bt, lens, use_kernel=True,
+                                 interpret=True, **kw)
+    np.testing.assert_allclose(pal, ref, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# regression: the old dense-engine cache-commit shape heuristic
+# ---------------------------------------------------------------------------
+
+def test_old_commit_heuristic_failure_pinned(params, cfg):
+    """The pre-paging engine committed per-slot cache rows by SHAPE
+    heuristic: any leaf with shape[1] == slots was assumed slot-major.
+    Pinned here: with slots == n_layers, a layer-major (L, S, ...) leaf
+    matches the heuristic and gets silently cross-written.  The paged
+    engine must keep exact parity in exactly that geometry (slot count ==
+    layer count == a plausible leaf dim), and no shape heuristic may
+    decide what is per-slot state again."""
+    slots = cfg.n_layers   # the coincidence the heuristic can't survive
+
+    def old_commit(new, old, slot):
+        # verbatim shape test from the old ServeEngine._decode_one_slot
+        if new.ndim >= 2 and new.shape[1] == slots:
+            return old.at[:, slot].set(new[:, slot])
+        return old
+
+    # a layer-major leaf (L=anything, S=slots): WRONGLY matched -> the
+    # heuristic overwrites sequence column `slot` across all layers.
+    layer_major = jnp.zeros((3, slots, 5))
+    touched = old_commit(jnp.ones((3, slots, 5)), layer_major, slot=1)
+    assert bool(jnp.any(touched != 0)), \
+        "heuristic no longer misfires? keep the pin honest"
+    # a per-slot leaf whose batch dim is NOT dim 1: silently never
+    # committed (the dual failure mode).
+    slot_major = jnp.zeros((slots, 7))
+    missed = old_commit(jnp.ones((slots, 7)), slot_major, slot=1)
+    assert bool(jnp.all(missed == 0))
+
+    eng = ServeEngine(params, cfg, slots=slots, max_seq=8 * slots,
+                      page_size=4)
+    for i in range(slots + 1):
+        eng.submit(Request(uid=i, prompt=[1 + i, 3], max_new_tokens=5))
+    done = eng.run_until_drained()
+    _assert_parity(eng, params, cfg, done)
+
+
+# ---------------------------------------------------------------------------
+# (c) hypothesis property tests (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+_PCFG = _cfg()
+_PPARAMS = init_params(_PCFG, KEY)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    prompts=st.lists(
+        st.lists(st.integers(1, 250), min_size=1, max_size=11),
+        min_size=1, max_size=6),
+    slots=st.integers(1, 5),
+    page=st.sampled_from([2, 4, 8]),
+    extra_pages=st.integers(0, 7),
+)
+def test_property_parity_random_batches(prompts, slots, page, extra_pages):
+    """Random prompt batches over random slot/page geometry (pool sizes
+    land on primes too): token parity + paging invariants always hold."""
+    max_seq = 16
+    pps = max_seq // page
+    pool = pps + extra_pages   # >= one full sequence; often prime
+    eng = ServeEngine(_PPARAMS, _PCFG, slots=slots, max_seq=max_seq,
+                      page_size=page, pool_pages=pool,
+                      prefill_chunk_len=page)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p[:max_seq - 1],
+                           max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == len(prompts)
+    eng.check_page_invariants()
+    assert eng.pool.free_count() == eng.pool.n_pages
+    for r in sorted(done, key=lambda r: r.uid):
+        ref = reference_decode(_PPARAMS, _PCFG, r.prompt,
+                               max_new_tokens=4, max_seq=max_seq)
+        assert r.out == ref, (r.uid, r.prompt, r.out, ref)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_pages=st.sampled_from([7, 11, 13]),
+    lens=st.lists(st.integers(0, 12), min_size=2, max_size=3),
+)
+def test_property_paged_attention_prime_pools(n_pages, lens):
+    """Paged gather == dense oracle on prime-sized pools and random
+    (including zero) lengths."""
+    b = len(lens)
+    page, pps, hkv, hq, d = 4, 3, 2, 4, 8
+    rng = np.random.RandomState(sum(lens) + n_pages)
+    bt = jnp.asarray(np.stack([
+        rng.choice(n_pages, size=pps, replace=False)   # distinct per row
+        for _ in range(b)]).astype(np.int32))
+    q = jax.random.normal(KEY, (b, 1, hq, d))
+    kp = jax.random.normal(jax.random.PRNGKey(3), (n_pages, page, hkv, d))
+    vp = jax.random.normal(jax.random.PRNGKey(4), (n_pages, page, hkv, d))
+    lv = jnp.asarray(lens, jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, bt, lv)
+    out = paged_decode_attention(q, kp, vp, bt, lv)
+    valid = np.asarray(lens) > 0   # zero-length rows are garbage-by-design
+    np.testing.assert_allclose(np.asarray(out)[valid],
+                               np.asarray(ref)[valid], atol=2e-6)

@@ -12,6 +12,11 @@ import textwrap
 
 import pytest
 
+# every test here launches a subprocess that re-initializes jax with 8
+# forced host devices — tens of seconds each (the bulk of tier-1 wall time,
+# see pytest --durations in CI).
+pytestmark = pytest.mark.slow
+
 ENV = dict(os.environ,
            XLA_FLAGS="--xla_force_host_platform_device_count=8",
            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -175,5 +180,75 @@ def test_elastic_restart_8_to_5_devices():
         got = lossesA[:4] + lossesB
         np.testing.assert_allclose(got, base, rtol=2e-4)
         print("OK", [round(x, 4) for x in got])
+    """)
+    assert "OK" in out
+
+
+def test_paged_serve_sharded_parity():
+    """Model-parallel paged decode on a 4x2 host mesh: the sharded engine
+    must emit exactly the single-device reference tokens, with prefill
+    still issuing ceil(ctx/chunk) jitted calls per request."""
+    out = run_py("""
+        import dataclasses, jax
+        from repro.compat import make_mesh
+        from repro.configs import get_arch
+        from repro.models import init_params
+        from repro.serve import Request, ServeEngine, reference_decode
+        cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                                  tie_embeddings=False)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_mesh((4, 2), ("data", "model"))
+        eng = ServeEngine(params, cfg, slots=4, max_seq=32,
+                          prefill_chunk_len=8, mesh=mesh)
+        prompts = [[1, 2, 3], [5, 6, 7, 8, 9], [9], [4] * 11, [2, 8]]
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        done = eng.run_until_drained()
+        assert len(done) == len(prompts)
+        eng.check_page_invariants()
+        for r in done:
+            assert r.prefill_calls == -(-len(r.prompt) // eng.chunk), \\
+                (r.uid, r.prefill_calls)
+            ref = reference_decode(params, cfg, r.prompt,
+                                   max_new_tokens=6, max_seq=32)
+            assert r.out == ref, (r.uid, r.out, ref)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_forward_matches_unsharded():
+    """Sharded forward == unsharded forward (the silent-corruption guard).
+
+    Pins the XLA CPU SPMD partitioner miscompile where RoPE's
+    split+concat on tensors fed by sharded matmuls scaled activations by
+    a mesh-axis size (layers.apply_rope now uses the reshape+stack form;
+    norm-scale stacks replicate in dist.sharding.param_specs).  Covers
+    qk-norm (qwen3), softcap/window/tied (gemma2), and MoE (olmoe).
+    KNOWN GAP: MLA (deepseek-v2) still trips the partitioner on
+    multi-axis meshes via its singleton-head rope/concat tensors —
+    tracked in ROADMAP open items, not asserted here.
+    """
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.configs import get_arch
+        from repro.models import init_params, forward
+        from repro.dist import act_sharding as act, sharding as D
+        mesh = make_mesh((4, 2), ("data", "model"))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (4, 16), 0, 256)}
+        for name in ("qwen3-0.6b", "gemma2-2b", "olmoe-1b-7b"):
+            cfg = get_arch(name).reduced()
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            params_s = jax.device_put(
+                params, D.to_named(mesh, D.param_specs(cfg, params, mesh)))
+            f = lambda p, b: forward(p, cfg, b, remat=False)
+            l0 = jax.jit(f)(params, batch)
+            with act.use_mesh_rules(mesh):
+                l1 = jax.jit(f)(params_s, batch)
+            d = float(jnp.max(jnp.abs(l0 - l1)))
+            assert d < 1e-3, (name, d)
+        print("OK")
     """)
     assert "OK" in out

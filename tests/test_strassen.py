@@ -1,0 +1,64 @@
+"""Strassen <-> semiring-matmul golden parity (tier-1).
+
+Closes the gap that core/strassen.py had no cross-check against
+core/matmul.py: the 7-way recursion, its PACO-partitioned execution, and
+the plan-faithful cuboid executor must all agree with the classic
+product at depths straddling the ``strassen_beneficial_depth`` gate.
+
+fp32 tolerance: Strassen's add/sub pre-combinations grow the error by a
+small constant factor per recursion level.  For seeded N(0,1) inputs at
+n=128, observed max |err| vs f64 is ~1e-4 at depth 2; the 1e-3 atol
+(with rtol 1e-4 on entries of magnitude ~sqrt(n)) gives ~10x headroom
+without masking a wrong combination matrix (which produces O(1) errors).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.matmul import paco_matmul
+from repro.core.strassen import (paco_strassen, strassen,
+                                 strassen_beneficial_depth)
+
+N = 128
+A = jax.random.normal(jax.random.PRNGKey(10), (N, N), jnp.float32)
+B = jax.random.normal(jax.random.PRNGKey(11), (N, N), jnp.float32)
+GOLD = np.asarray(A, np.float64) @ np.asarray(B, np.float64)
+
+# Depths straddling the cost-model gate: the gate itself (MXU-dominant
+# ratios push it to 0), one past it, and two past it.
+_GATE = strassen_beneficial_depth(N)
+DEPTHS = sorted({0, _GATE, _GATE + 1, _GATE + 2})
+
+
+def _check(c: jax.Array) -> None:
+    np.testing.assert_allclose(np.asarray(c), GOLD, atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_strassen_matches_classic(depth):
+    _check(strassen(A, B, depth=depth))
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("p", [1, 3, 7, 8])   # primes + the tree arity
+def test_paco_strassen_matches_semiring(depth, p):
+    """PACO-partitioned Strassen == plan-faithful semiring executor for
+    arbitrary p, including primes (the paper's 'almost exact' claim)."""
+    c_strassen = paco_strassen(A, B, p, depth=depth)
+    c_semiring = paco_matmul(A, B, p)
+    _check(c_strassen)
+    _check(c_semiring)
+    np.testing.assert_allclose(np.asarray(c_strassen),
+                               np.asarray(c_semiring), atol=1e-3)
+
+
+def test_beneficial_depth_gate_monotone_in_vpu_rate():
+    """The gate opens as the VPU:MXU gap closes (sanity of the cost
+    model's direction), and is 0 on the TPU-like default ratio for small
+    matrices."""
+    assert strassen_beneficial_depth(256) == 0
+    fast_vpu = strassen_beneficial_depth(1 << 14, mxu_flops=1e12,
+                                         vpu_flops=1e12)
+    assert fast_vpu >= strassen_beneficial_depth(1 << 14)
+    assert fast_vpu > 0
