@@ -1,9 +1,16 @@
 """Serving benchmark: sustained tok/s + time-to-first-token (TTFT).
 
-qwen3-0.6b-reduced on the paged continuous-batching engine at slots in
-{4, 16} — the perf trajectory baseline for the serving path
+Two cache families on the paged continuous-batching engine
 (BENCH_serve.json; re-generate with
-``PYTHONPATH=src python -m benchmarks.bench_serve --write-baseline``).
+``PYTHONPATH=src python -m benchmarks.bench_serve --write-baseline``):
+
+  * qwen3-0.6b-reduced (dense GQA KV pages) at slots in {4, 16} — the
+    perf trajectory baseline for the serving path since PR 2;
+  * deepseek-v2-236b-reduced (compressed MLA latent pages, absorbed-W_uk
+    decode) at slots=4 — plus the latent cache's reason to exist:
+    cache bytes/token of the c_kv/k_rope leaves vs the dense per-head
+    KV layout the GQA family stores (the bench asserts latent <= dense;
+    at FULL deepseek-v2 scale the ratio is ~1.8%).
 
 Protocol: compile first (one throwaway request exercises prefill +
 decode), then (a) TTFT = wall time from submit to the first emitted
@@ -19,26 +26,44 @@ import pathlib
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import row
 from repro.configs import get_arch
-from repro.models import init_params
+from repro.models import init_params, paged_cache_leaf_specs
 from repro.serve import Request, ServeEngine
 
-ARCH = "qwen3-0.6b"
 NEW_TOKENS = 16
 BASELINE = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serve.json"
 
 
-def _engine(slots: int) -> ServeEngine:
-    cfg = get_arch(ARCH).reduced()
+def _engine(arch: str, slots: int) -> ServeEngine:
+    cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     return ServeEngine(params, cfg, slots=slots, max_seq=64)
 
 
-def measure(slots: int) -> dict:
-    eng = _engine(slots)
+def cache_bytes_per_token(cfg, page: int) -> dict:
+    """Bytes per cached token: the engine's actual leaves vs the dense
+    per-head KV layout (2 leaves of H heads; for MLA the materialized
+    k = [W_uk c_kv | k_rope] and v = W_uv c_kv heads it avoids)."""
+    leaves = paged_cache_leaf_specs(cfg, page)
+    actual = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                 for s in leaves.values()) // page
+    if cfg.attn == "mla":
+        m = cfg.mla
+        dense = (cfg.n_layers * cfg.n_heads
+                 * ((m.qk_nope + m.qk_rope) + m.v_head)
+                 * cfg.dtype.itemsize)
+    else:
+        dense = (cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim
+                 * cfg.dtype.itemsize)
+    return {"bytes_per_token": actual, "bytes_per_token_dense_kv": dense}
+
+
+def measure(arch: str, slots: int) -> dict:
+    eng = _engine(arch, slots)
     # compile: one request through prefill + decode + retirement
     eng.submit(Request(uid=-1, prompt=[1, 2, 3], max_new_tokens=2))
     eng.run_until_drained()
@@ -62,22 +87,34 @@ def measure(slots: int) -> dict:
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     total = sum(len(r.out) for r in done)
-    return {"slots": slots, "requests": n_req, "tokens": total,
-            "tok_s": round(total / dt, 1),
-            "ttft_ms": round(ttft * 1e3, 2),
-            "page_size": eng.page, "prefill_chunk": eng.chunk,
-            "pool_pages": eng.pool.n_pages}
+    out = {"slots": slots, "requests": n_req, "tokens": total,
+           "tok_s": round(total / dt, 1),
+           "ttft_ms": round(ttft * 1e3, 2),
+           "page_size": eng.page, "prefill_chunk": eng.chunk,
+           "pool_pages": eng.pool.n_pages}
+    out.update(cache_bytes_per_token(eng.cfg, eng.page))
+    # the latent family must never cost more cache than dense KV would
+    assert out["bytes_per_token"] <= out["bytes_per_token_dense_kv"], out
+    return out
 
 
 def main() -> dict:
-    results = {}
+    results: dict = {}
     for slots in (4, 16):
-        r = measure(slots)
+        r = measure("qwen3-0.6b", slots)
         results[str(slots)] = r
-        row(f"serve_{ARCH}_s{slots}_tok_s", 1e6 / max(r["tok_s"], 1e-9),
+        row(f"serve_qwen3-0.6b_s{slots}_tok_s", 1e6 / max(r["tok_s"], 1e-9),
             f"tok_s={r['tok_s']}")
-        row(f"serve_{ARCH}_s{slots}_ttft", r["ttft_ms"] * 1e3,
+        row(f"serve_qwen3-0.6b_s{slots}_ttft", r["ttft_ms"] * 1e3,
             f"ttft_ms={r['ttft_ms']}")
+    r = measure("deepseek-v2-236b", 4)
+    results["mla"] = r
+    row("serve_deepseek-v2_s4_tok_s", 1e6 / max(r["tok_s"], 1e-9),
+        f"tok_s={r['tok_s']}")
+    row("serve_deepseek-v2_s4_ttft", r["ttft_ms"] * 1e3,
+        f"ttft_ms={r['ttft_ms']}")
+    row("serve_deepseek-v2_cache_bytes_tok", r["bytes_per_token"],
+        f"dense_kv={r['bytes_per_token_dense_kv']}")
     return results
 
 
@@ -88,10 +125,14 @@ if __name__ == "__main__":
     args = ap.parse_args()
     res = main()
     if args.write_baseline:
-        payload = {"arch": f"{ARCH}-reduced", "new_tokens": NEW_TOKENS,
+        payload = {"arch": "qwen3-0.6b-reduced + deepseek-v2-236b-reduced",
+                   "new_tokens": NEW_TOKENS,
                    "note": "CPU host baseline; absolute numbers are "
                            "machine-dependent — track the trajectory, "
-                           "not the value",
+                           "not the value.  'mla' is the latent-paged "
+                           "deepseek row; bytes_per_token compares its "
+                           "compressed c_kv/k_rope leaves to the dense "
+                           "per-head KV layout it avoids.",
                    "slots": res}
         BASELINE.write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {BASELINE}")

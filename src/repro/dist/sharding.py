@@ -99,12 +99,66 @@ def _expert_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
     return P(*((None,) * lead), e_entry, *entries)
 
 
+def _mla_weight_spec(key: str, shape: tuple[int, ...], cfg, mesh: Mesh
+                     ) -> P | None:
+    """PACO k-cut bridge for the MLA low-rank factors; None = not MLA.
+
+    Down-projections (``w_dq``, ``w_dkv``) take the k-cut: row-parallel
+    on d_model (their d_in face dominates — ``paco_spec``'s
+    ``needs_psum`` branch, GSPMD inserts the combining reduction).
+    ``w_dkv`` especially must NEVER be column-cut — not by the model
+    axis and not by the dp-FSDP fallback: its output is the
+    [c_kv | k_rope] concat, and any cut there can land mid-boundary,
+    re-sharding the slices the layers-level constraints pin
+    replicated.  Up-projections (``w_uq``, ``w_uk``, ``w_uv``) are
+    column-parallel iff the cut is HEAD-ALIGNED (n_heads divisible by
+    the model axis, so each shard owns whole heads — the layout
+    ``mla_absorbed_q``'s per-head einsums keep local); otherwise they
+    fall back to a dp-only cut.  The low-rank bottleneck dims
+    (q_lora/kv_lora) are never model-cut: they are the latent faces the
+    absorbed attention contracts over."""
+    m = getattr(cfg, "mla", None)
+    if m is None or key not in ("w_dq", "w_dkv", "w_uq", "w_uk", "w_uv"):
+        return None
+    pm = _model_size(mesh)
+    has_model = _MODEL_AXIS in mesh.shape and pm > 1
+    d_in, d_out = shape[-2:]
+    entries: list = [None, None]
+    if key == "w_dkv":
+        # k-cut ONLY: the packed [c_kv | k_rope] output face is never
+        # cut on ANY axis — a dp-FSDP cut there is just as poisonous as
+        # a model cut (e.g. 40 cols / 4-way dp = shards of 10, and the
+        # kv_lora=32 slice boundary lands mid-shard; the partitioner
+        # miscompiles the downstream slice+norm+rope chain — THE root
+        # cause of the multi-axis-mesh MLA divergence, DESIGN.md §8.6).
+        if has_model and d_in % pm == 0:
+            entries[0] = _MODEL_AXIS
+        else:
+            entries[0] = _dp_entry(mesh, d_in)
+        return P(*entries)
+    if key == "w_dq":
+        if has_model and d_in % pm == 0:
+            entries[0] = _MODEL_AXIS
+    else:  # up-projections: head-aligned column cut
+        if has_model and cfg.n_heads % pm == 0 and d_out % pm == 0:
+            entries[1] = _MODEL_AXIS
+    free = [i for i in (0, 1) if entries[i] is None]
+    dims = (d_in, d_out)
+    for i in sorted(free, key=lambda i: -dims[i]):
+        e = _dp_entry(mesh, dims[i])
+        if e is not None:
+            entries[i] = e
+            break
+    return P(*entries)
+
+
 def param_specs(cfg, params: Any, mesh: Mesh) -> Any:
     """PartitionSpec pytree for a parameter pytree (arrays or
     ShapeDtypeStructs).  Scalars/vectors replicate; matrices get the PACO
     weight rule on their trailing two dims (leading stacked layer/group
     dims replicate); MoE expert stacks additionally shard the expert dim
-    over the model axis.
+    over the model axis; MLA low-rank factors get the head-aligned /
+    k-cut rules of ``_mla_weight_spec``.
 
     Layer-STACKED norm scales (``ln*``/``*norm`` leaves, shape (L, d))
     replicate: they are elementwise gains, not matmul faces — the planner
@@ -127,6 +181,9 @@ def param_specs(cfg, params: Any, mesh: Mesh) -> Any:
         if len(shape) >= 3 and shape[-3] == n_experts:
             return _expert_spec(shape, mesh)
         lead = (None,) * (len(shape) - 2)
+        mla = _mla_weight_spec(key, shape, cfg, mesh)
+        if mla is not None:
+            return P(*lead, *mla)
         return P(*lead, *_weight_spec(shape[-2], shape[-1], mesh))
 
     return jax.tree_util.tree_map_with_path(spec, params)
@@ -173,7 +230,7 @@ def cache_specs(cfg, mesh: Mesh, cache: Mapping[str, Any]
             d = model_on(shape, 3, 2)           # heads first, else sequence
         elif name == "c_kv":                    # (L, B, S, kv_lora)
             d = model_on(shape, 2)
-        elif name == "k_rope":                  # (L, B, S, 1, qk_rope)
+        elif name == "k_rope":                  # (L, B, S, qk_rope)
             d = model_on(shape, 2)
         elif name == "conv":                    # (L, B, W-1, C)
             d = model_on(shape, 3)
@@ -189,27 +246,32 @@ def cache_specs(cfg, mesh: Mesh, cache: Mapping[str, Any]
 
 def paged_pool_specs(cfg, mesh: Mesh, pools: Mapping[str, Any]
                      ) -> dict[str, P]:
-    """Shardings for the serve engine's KV page pools, shaped
-    (L, n_pages, page, H, dh) per leaf.
+    """Shardings for the serve engine's page pools.
 
-    The model axis cuts the head dimension when it divides (the same head
-    cut ``cache_specs`` uses for dense decode caches); otherwise the page
-    *contents* stay whole and the physical-page dimension is left
-    unsharded — pages are gathered by block table, and cutting the pool
-    dimension would turn every gather into an all-to-all.  The dp axes
-    replicate: each data-parallel replica serves its own traffic
-    (DESIGN.md §8.3)."""
+    Dense-KV pools (``k``/``v``, shaped (L, n_pages, page, H, dh)): the
+    model axis cuts the head dimension when it divides (the same head
+    cut ``cache_specs`` uses for dense decode caches).  MLA latent pools
+    (``c_kv``/``k_rope``, shaped (L, n_pages, page, feat)) REPLICATE
+    over the model axis: they are head-free, tiny (kv_lora << H*dh —
+    the whole point of latent paging), and their feature dim is the
+    contraction face of the absorbed latent attention — cutting it
+    would psum every decode score.  In all cases the page *contents*
+    stay whole and the physical-page dimension is never cut — pages are
+    gathered by block table, and cutting the pool dimension would turn
+    every gather into an all-to-all.  The dp axes replicate: each
+    data-parallel replica serves its own traffic (DESIGN.md §8.3)."""
     pm = _model_size(mesh)
     has_model = _MODEL_AXIS in mesh.shape and pm > 1
 
-    def spec(leaf) -> P:
+    def spec(name: str, leaf) -> P:
         shape = tuple(leaf.shape)
         entries: list = [None] * len(shape)
-        if has_model and len(shape) >= 2 and shape[-2] % pm == 0:
+        if (name in ("k", "v", "xk", "xv") and has_model
+                and len(shape) >= 2 and shape[-2] % pm == 0):
             entries[-2] = _MODEL_AXIS   # heads (k/v pools: (L,NP,page,H,dh))
         return P(*entries)
 
-    return {name: spec(leaf) for name, leaf in pools.items()}
+    return {name: spec(name, leaf) for name, leaf in pools.items()}
 
 
 def to_named(mesh: Mesh, specs: Any) -> Any:

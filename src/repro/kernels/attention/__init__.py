@@ -1,11 +1,16 @@
 from repro.kernels.attention.attention import (flash_attention_pallas,
-                                               paged_flash_decode_pallas)
+                                               paged_flash_decode_pallas,
+                                               paged_latent_decode_pallas)
 from repro.kernels.attention.ops import (flash_attention, gather_kv_pages,
-                                         paged_decode_attention)
-from repro.kernels.attention.ref import attention_ref, paged_attention_ref
+                                         paged_decode_attention,
+                                         paged_latent_decode_attention)
+from repro.kernels.attention.ref import (attention_ref, paged_attention_ref,
+                                         paged_latent_attention_ref)
 
 __all__ = [
     "flash_attention_pallas", "paged_flash_decode_pallas",
+    "paged_latent_decode_pallas",
     "flash_attention", "gather_kv_pages", "paged_decode_attention",
-    "attention_ref", "paged_attention_ref",
+    "paged_latent_decode_attention",
+    "attention_ref", "paged_attention_ref", "paged_latent_attention_ref",
 ]

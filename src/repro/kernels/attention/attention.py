@@ -202,3 +202,99 @@ def paged_flash_decode_pallas(q: jax.Array, k_pages: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
     )(lengths, block_tables, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Paged LATENT decode kernel (MLA serving): compressed head-free pages
+# ---------------------------------------------------------------------------
+
+def _paged_latent_decode_kernel(lengths_ref, bt_ref, ql_ref, qr_ref,
+                                ckv_ref, kr_ref, o_ref, m_ref, l_ref,
+                                acc_ref, *, scale: float, pps: int,
+                                page: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)           # (H, kv_lora)
+    qr = qr_ref[0].astype(jnp.float32)           # (H, qk_rope)
+    ckv = ckv_ref[0].astype(jnp.float32)         # (page, kv_lora)
+    kr = kr_ref[0].astype(jnp.float32)           # (page, qk_rope)
+    # decomposed scores: q_lat . c_kv + q_rope . k_rope (two MXU dots —
+    # same math as scoring the concatenated key, no concat needed)
+    s = (jnp.dot(ql, ckv.T, preferred_element_type=jnp.float32)
+         + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)) * scale
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < lengths_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+    # the latent IS the value: acc accumulates (H, kv_lora)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, ckv, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_latent_decode_pallas(q_lat: jax.Array, q_rope: jax.Array,
+                               ckv_pages: jax.Array, kr_pages: jax.Array,
+                               block_tables: jax.Array,
+                               lengths: jax.Array, *, scale: float,
+                               interpret: bool = False) -> jax.Array:
+    """Paged MLA latent decode: q_lat (B, H, kv_lora) + q_rope (B, H,
+    qk_rope) vs head-free latent pools ckv_pages (n_pages, page,
+    kv_lora) / kr_pages (n_pages, page, qk_rope) indexed by block_tables
+    (B, pages_per_seq).
+
+    The MQA extreme of the paged decode kernel: ONE shared latent
+    key/value for all H query heads, so the grid is just
+    (B, pages_per_seq) and each step DMAs one (page, kv_lora + qk_rope)
+    latent leaf tile — the smallest face the PACO cut schedule offers.
+    The latent doubles as the value (acc is (H, kv_lora)); W_uv expansion
+    happens outside the kernel.  Returns (B, H, kv_lora).
+    """
+    b, h, kv_lora = q_lat.shape
+    rope = q_rope.shape[-1]
+    pps = block_tables.shape[1]
+    page = ckv_pages.shape[1]
+    grid = (b, pps)
+    return pl.pallas_call(
+        functools.partial(_paged_latent_decode_kernel, scale=scale,
+                          pps=pps, page=page),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, h, kv_lora),
+                             lambda b, j, lens, bt: (b, 0, 0)),
+                pl.BlockSpec((1, h, rope),
+                             lambda b, j, lens, bt: (b, 0, 0)),
+                pl.BlockSpec((1, page, kv_lora),
+                             lambda b, j, lens, bt: (bt[b, j], 0, 0)),
+                pl.BlockSpec((1, page, rope),
+                             lambda b, j, lens, bt: (bt[b, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, kv_lora),
+                                   lambda b, j, lens, bt: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((h, 1), jnp.float32),        # running max
+                pltpu.VMEM((h, 1), jnp.float32),        # running denom
+                pltpu.VMEM((h, kv_lora), jnp.float32),  # latent accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, kv_lora), q_lat.dtype),
+        interpret=interpret,
+    )(lengths, block_tables, q_lat, q_rope, ckv_pages, kr_pages)

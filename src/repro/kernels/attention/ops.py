@@ -13,8 +13,9 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.attention.attention import (flash_attention_pallas,
-                                               paged_flash_decode_pallas)
+from repro.kernels.attention.attention import (
+    flash_attention_pallas, paged_flash_decode_pallas,
+    paged_latent_decode_pallas)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -87,3 +88,53 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     out = jnp.einsum("bhgs,bshd->bhgd", w, v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, hq, dhv).astype(q.dtype)
+
+
+def paged_latent_decode_attention(q_lat: jax.Array, q_rope: jax.Array,
+                                  ckv_pages: jax.Array,
+                                  kr_pages: jax.Array,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array, *, scale: float,
+                                  use_kernel: bool = False,
+                                  interpret: bool = False) -> jax.Array:
+    """Single-token decode against a COMPRESSED (MLA latent) paged cache.
+
+    q_lat: (B, 1, H, kv_lora) absorbed-W_uk queries; q_rope: (B, 1, H,
+    qk_rope); ckv_pages: (n_pages, page, kv_lora); kr_pages: (n_pages,
+    page, qk_rope) — head-free latent pools; block_tables
+    (B, pages_per_seq) int32; lengths (B,).  Returns (B, 1, H, kv_lora):
+    the latent attention output, expanded through W_uv by the caller
+    (models.layers.mla_out).
+
+    Every head shares one latent key/value, so the cache read is
+    O(S * (kv_lora + qk_rope)) bytes — the small face of the paper's
+    surface-minimizing cut — instead of O(S * H * dh); the head
+    expansion is never materialized, and scores use the decomposed
+    q_lat . c_kv + q_rope . k_rope form (no feature concat — the
+    concat form miscompiles under the XLA CPU SPMD partitioner,
+    layers.latent_attention).  The jnp path gathers each sequence's
+    latent pages through the block table; ``use_kernel=True`` lowers to
+    the Pallas kernel with scalar-prefetched block tables.  Dense
+    oracle: ``ref.paged_latent_attention_ref``.
+    """
+    b, _, h, kv = q_lat.shape
+    if use_kernel:
+        o = paged_latent_decode_pallas(
+            q_lat.reshape(b, h, kv), q_rope.reshape(b, h, -1), ckv_pages,
+            kr_pages, block_tables, lengths, scale=scale,
+            interpret=interpret)
+        return o.reshape(b, 1, h, -1).astype(q_lat.dtype)
+    ck = gather_kv_pages(ckv_pages, block_tables)   # (B, S, kv_lora)
+    kr = gather_kv_pages(kr_pages, block_tables)    # (B, S, qk_rope)
+    s = ck.shape[1]
+    scores = (jnp.einsum("bqhk,bsk->bhqs", q_lat, ck,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr,
+                           preferred_element_type=jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(ck.dtype)
+    out = jnp.einsum("bhqs,bsk->bqhk", w, ck,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_lat.dtype)                  # (B, 1, H, kv_lora)

@@ -72,3 +72,41 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_latent_attention_ref(q_lat: jax.Array, q_rope: jax.Array,
+                               ckv_pages: jax.Array, kr_pages: jax.Array,
+                               block_tables: jax.Array,
+                               lengths: jax.Array, *, scale: float
+                               ) -> jax.Array:
+    """Dense oracle for the paged MLA latent decode path.
+
+    q_lat: (B, 1, H, kv_lora) absorbed queries; q_rope: (B, 1, H,
+    qk_rope); ckv_pages (n_pages, page, kv_lora) / kr_pages (n_pages,
+    page, qk_rope) are the head-free latent pools; block_tables
+    (B, pages_per_seq); lengths (B,).  Deliberately the formulation the
+    production path avoids: materializes each sequence's gathered
+    latent cache, CONCATENATES the latent pair into per-position keys,
+    BROADCASTS them to every head, and runs dense f32 softmax — the
+    correctness anchor for ops.paged_latent_decode_attention and the
+    Pallas latent kernel (tests/test_serve.py).  Returns
+    (B, 1, H, kv_lora)."""
+    b, _, h, kv = q_lat.shape
+    page = ckv_pages.shape[1]
+    pps = block_tables.shape[1]
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)
+    dk = q.shape[-1]
+    ck = ckv_pages[block_tables].reshape(b, pps * page, -1)
+    kr = kr_pages[block_tables].reshape(b, pps * page, -1)
+    k = jnp.concatenate([ck, kr], axis=-1)           # (B, S, kv+rope)
+    k = jnp.broadcast_to(k[:, :, None, :], (b, k.shape[1], h, dk))
+    v = jnp.broadcast_to(ck[:, :, None, :],
+                         (b, ck.shape[1], h, ck.shape[-1]))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(pps * page)
+    mask = pos[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -66,9 +66,11 @@ def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
                                        dtype=jnp.float32) / head_dim))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
-               ) -> jax.Array:
-    """x: (..., S, H, Dh); positions: (..., S).
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               *, head_axis: bool = True) -> jax.Array:
+    """x: (..., S, H, Dh) — or (..., S, Dh) with ``head_axis=False`` for
+    per-position features shared by every head (the MLA rope half).
+    positions: (..., S).
 
     Rotation pairs (x[i], x[i + Dh/2]) — the half-split convention —
     expressed as a reshape to (..., 2, Dh/2) + stack rather than
@@ -77,10 +79,18 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
     sharded matmul (output scaled by a mesh-axis size; pinned by
     tests/test_spmd.py::test_sharded_forward_matches_unsharded).  The
     two forms are element-for-element identical.
+
+    ``head_axis=False`` exists because the partitioner ALSO miscompiles
+    this reshape when the input carries a singleton head dim (the old MLA
+    (B, S, 1, qk_rope) layout): it invents shardings for the size-1 axis
+    and rescales the tensor by a mesh-axis size.  Head-free rope inputs
+    keep every dimension real, so there is nothing to mis-shard
+    (DESIGN.md §8.6).
     """
     dh = x.shape[-1]
     freqs = rope_freqs(dh, theta)  # (dh/2,)
-    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # S,1,dh/2
+    exp = (None, None) if head_axis else (None,)
+    ang = positions[(..., slice(None)) + exp].astype(jnp.float32) * freqs
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     xf = x.astype(jnp.float32).reshape(*x.shape[:-1], 2, dh // 2)
     x1, x2 = xf[..., 0, :], xf[..., 1, :]
@@ -336,26 +346,35 @@ def init_mla(key, cfg, dtype) -> Params:
     }
 
 
+def mla_scale(cfg) -> float:
+    """MLA softmax scale: per-head query width is qk_nope + qk_rope."""
+    m = cfg.mla
+    return 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
+
+
 def mla_latents(p: Params, cfg, x: jax.Array, positions: jax.Array
                 ) -> tuple[jax.Array, jax.Array]:
-    """Compressed KV latents: c_kv (B,S,kv_lora), k_rope (B,S,1,qk_rope)."""
+    """Compressed KV latents: c_kv (B,S,kv_lora), k_rope (B,S,qk_rope).
+
+    NEITHER leaf carries a head axis: the latent and its rope half are
+    shared by every query head, and the old (B, S, 1, qk_rope) layout's
+    singleton head dim is what drove the XLA CPU SPMD partitioner into
+    the rope-reshape miscompile on multi-axis meshes (it invented a
+    2-way sharding for the size-1 axis and scaled the activations by
+    it).  Head-free tensors through the same reshape+stack rope the GQA
+    path uses leave nothing to mis-shard (DESIGN.md §8.6); the feature
+    dim is resolved replicated before the norm/rope split (see
+    gqa_qkv).
+    """
     from repro.dist import act_sharding as act
 
     m = cfg.mla
-    # feature dim resolved before the norm/rope split (see gqa_qkv); the
-    # (B, S, 1, qk_rope) rope input is additionally pinned replicated —
-    # its singleton head dim otherwise invites the partitioner into the
-    # rope-reshape miscompile the gqa path dodges.
     ckv_kr = act.constrain(x @ p["w_dkv"], "dp", None, None)
     c_kv = rms_norm(ckv_kr[..., : m.kv_lora], p["kv_norm"])
-    k_rope = apply_rope(
-        act.constrain(ckv_kr[..., m.kv_lora:][:, :, None, :],
-                      "dp", None, None, None),
-        positions, cfg.rope_theta)
-    # pin the OUTPUT as well: consumers (the k_cat concat in apply_mla)
-    # otherwise propagate a head/feature sharding backward into rope's
-    # interior and re-trigger the partitioner miscompile.
-    return c_kv, act.constrain(k_rope, "dp", None, None, None)
+    k_rope = apply_rope(ckv_kr[..., m.kv_lora:], positions, cfg.rope_theta,
+                        head_axis=False)
+    return (act.constrain(c_kv, "dp", None, None),
+            act.constrain(k_rope, "dp", None, None))
 
 
 def mla_queries(p: Params, cfg, x: jax.Array, positions: jax.Array
@@ -374,29 +393,149 @@ def mla_queries(p: Params, cfg, x: jax.Array, positions: jax.Array
     return q_nope, q_rope
 
 
+def mla_absorbed_q(p: Params, cfg, x: jax.Array, positions: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Queries projected INTO the latent space (absorbed W_uk):
+    q_lat (B, S, H, kv_lora) and q_rope (B, S, H, qk_rope), head dims
+    constrained to the model axis.
+
+    q_lat . c_kv == (q_nope W_uk) . c_kv == q_nope . (W_uk c_kv): scores
+    against the compressed latent equal scores against materialized
+    per-head keys, so the cache never stores h*dh per position —
+    kv_lora + qk_rope << h*(qk_nope + qk_rope) is the small-face cuboid
+    the paper's surface-minimizing cut keeps resident.  The two halves
+    stay SEPARATE tensors: every downstream consumer scores them with
+    the decomposed q_lat . c_kv + q_rope . k_rope form (see
+    latent_attention), never through a feature concat."""
+    from repro.dist import act_sharding as act
+
+    m = cfg.mla
+    q_nope, q_rope = mla_queries(p, cfg, x, positions)
+    w_uk = p["w_uk"].reshape(m.kv_lora, cfg.n_heads, m.qk_nope)
+    q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk)
+    return act.heads(q_lat), act.heads(q_rope)
+
+
+def mla_out(p: Params, cfg, o_lat: jax.Array) -> jax.Array:
+    """Latent attention output (B, S, H, kv_lora) -> (B, S, d_model):
+    expand through W_uv per head, then the output projection."""
+    from repro.dist import act_sharding as act
+
+    m = cfg.mla
+    b, s = o_lat.shape[:2]
+    w_uv = p["w_uv"].reshape(m.kv_lora, cfg.n_heads, m.v_head)
+    o = jnp.einsum("bshk,khd->bshd", act.heads(o_lat), w_uv)
+    return o.reshape(b, s, cfg.n_heads * m.v_head) @ p["wo"]
+
+
+def latent_attention(q_lat: jax.Array, q_rope: jax.Array, c_kv: jax.Array,
+                     k_rope: jax.Array, *, q_positions: jax.Array,
+                     k_positions: jax.Array, scale: float,
+                     causal: bool = True, q_chunk: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention against the SHARED compressed
+    latent (absorbed MLA) — the MQA extreme of the flash formulation.
+
+    q_lat (B,Sq,H,kv_lora), q_rope (B,Sq,H,qk_rope) vs head-free
+    c_kv (B,Sk,kv_lora), k_rope (B,Sk,qk_rope) -> (B,Sq,H,kv_lora).
+
+    Scores are the DECOMPOSED form  q_lat . c_kv + q_rope . k_rope
+    (algebraically q_cat . [c_kv | k_rope]): no feature concat of the
+    latent pair and no head-broadcast of the keys ever materializes.
+    Both matter: the XLA CPU SPMD partitioner miscompiles the
+    concat-then-attend form on multi-axis meshes (values off by O(1);
+    pinned by test_spmd.test_sharded_forward_matches_unsharded), and the
+    H-fold key expansion would multiply the cache-read bytes by H for
+    identical math.  c_kv doubles as the value (W_uv expansion happens
+    in mla_out).  Chunking mirrors ``attention``: a rematted scan over
+    query chunks keeps peak memory O(q_chunk * Sk) per (batch, head).
+    """
+    from repro.dist import act_sharding as act
+    from repro.models import flags
+
+    b, sq, h, kv = q_lat.shape
+    rope = q_rope.shape[-1]
+    q_lat, q_rope = act.heads(q_lat), act.heads(q_rope)
+    c_kv = act.constrain(c_kv, "dp", None, None)
+    k_rope = act.constrain(k_rope, "dp", None, None)
+    qc = min(q_chunk, sq)
+    n_chunks = -(-sq // qc)
+    pad = n_chunks * qc - sq
+    if pad:
+        q_lat = jnp.pad(q_lat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad), constant_values=-1)
+    ql = q_lat.reshape(b, n_chunks, qc, h, kv).transpose(1, 0, 3, 2, 4)
+    qr = q_rope.reshape(b, n_chunks, qc, h, rope).transpose(1, 0, 3, 2, 4)
+
+    def one_chunk(carry, inp):
+        qli, qri, qpos = inp  # (B, H, qc, kv), (B, H, qc, rope), (qc,)
+        s = (jnp.einsum("bhqk,bsk->bhqs", qli, c_kv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhqr,bsr->bhqs", qri, k_rope,
+                          preferred_element_type=jnp.float32)) * scale
+        mask = _chunk_mask(qpos, k_positions, causal=causal, window=None)
+        s = jnp.where(mask[None, None], s, -1e30)
+        s = act.constrain(s, "dp", "model", None, None)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        p_mat = (e / jnp.maximum(z, 1e-30)).astype(c_kv.dtype)
+        o = jnp.einsum("bhqs,bsk->bhqk", p_mat, c_kv,
+                       preferred_element_type=jnp.float32)
+        o = act.constrain(o, "dp", "model", None, None)
+        return carry, o.astype(q_lat.dtype)
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(one_chunk), None,
+        (ql, qr, q_positions.reshape(n_chunks, qc)),
+        unroll=flags.scan_unroll(n_chunks))
+    # outs: (n_chunks, B, H, qc, kv)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, n_chunks * qc, h, kv)
+    return act.heads(out)[:, :sq]
+
+
 def apply_mla(p: Params, cfg, x: jax.Array, positions: jax.Array
               ) -> jax.Array:
     """MLA with the latent kept compressed: queries are projected *into* the
     latent space (absorbed W_uk), attention runs against c_kv directly —
     the cache-and-flops-saving trick the paper's surface-minimizing cut
-    favours (the latent face kv_lora << h*dh)."""
-    m = cfg.mla
-    b, s, _ = x.shape
-    h = cfg.n_heads
-    q_nope, q_rope = mla_queries(p, cfg, x, positions)
+    favours (the latent face kv_lora << h*dh).  Pinned against the naive
+    uncompressed formulation (materialized per-head k/v) by
+    tests/test_models.py::test_mla_absorbed_matches_uncompressed."""
+    q_lat, q_rope = mla_absorbed_q(p, cfg, x, positions)
     c_kv, k_rope = mla_latents(p, cfg, x, positions)
-    # absorb W_uk: q_lat[b,s,h,kv_lora] = q_nope . W_uk(kv_lora, h, qk_nope)
-    w_uk = p["w_uk"].reshape(m.kv_lora, h, m.qk_nope)
-    q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk.transpose(0, 1, 2))
-    # scores: latent part + rope part; softmax over keys; chunked over q.
-    scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
-    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)  # (b,s,h,kv+rope)
-    k_cat = jnp.concatenate(
-        [c_kv[:, :, None, :], k_rope], axis=-1)  # (b,s,1,kv+rope)
-    o_lat = attention(q_cat, k_cat, c_kv[:, :, None, :],
-                      q_positions=positions, k_positions=positions,
-                      causal=True, q_chunk=cfg.q_chunk, scale=scale)
-    # expand latent output through W_uv: (b,s,h,kv_lora) @ (kv_lora,h,v)
-    w_uv = p["w_uv"].reshape(m.kv_lora, h, m.v_head)
-    o = jnp.einsum("bshk,khd->bshd", o_lat, w_uv)
-    return o.reshape(b, s, h * m.v_head) @ p["wo"]
+    o_lat = latent_attention(q_lat, q_rope, c_kv, k_rope,
+                             q_positions=positions, k_positions=positions,
+                             causal=True, q_chunk=cfg.q_chunk,
+                             scale=mla_scale(cfg))
+    return mla_out(p, cfg, o_lat)
+
+
+def latent_decode_attention(q_lat: jax.Array, q_rope: jax.Array,
+                            c_kv: jax.Array, k_rope: jax.Array, *,
+                            lengths: jax.Array, scale: float) -> jax.Array:
+    """Single-token decode against a SHARED-latent cache (absorbed MLA).
+
+    q_lat (B, 1, H, kv_lora), q_rope (B, 1, H, qk_rope) vs head-free
+    caches c_kv (B, S, kv_lora), k_rope (B, S, qk_rope): every head
+    attends the same latent, so the cache read is O(S * (kv_lora +
+    qk_rope)) bytes instead of O(S * H * dh) — the head expansion is
+    never materialized (decode is bytes-bound on the cache read).
+    Scores use the same decomposed no-concat form as
+    ``latent_attention``."""
+    from repro.dist import act_sharding as act
+
+    s = c_kv.shape[1]
+    c_kv = act.constrain(c_kv, "dp", None, None)
+    k_rope = act.constrain(k_rope, "dp", None, None)
+    scores = (jnp.einsum("bqhk,bsk->bhqs", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    out = jnp.einsum("bhqs,bsk->bqhk", w, c_kv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_lat.dtype)  # (B, 1, H, kv_lora)

@@ -123,12 +123,15 @@ def cache_spec_decoder(cfg: ArchConfig, batch: int, max_seq: int
     dt = cfg.dtype
     lyr = cfg.n_layers
     if cfg.attn == "mla":
+        # head-free latent leaves (kv_lora + qk_rope bytes per position,
+        # vs 2*H*dh for dense KV) — see layers.mla_latents for why no
+        # singleton head dim may appear here.
         m = cfg.mla
         return {
             "c_kv": jax.ShapeDtypeStruct((lyr, batch, max_seq, m.kv_lora),
                                          dt),
             "k_rope": jax.ShapeDtypeStruct(
-                (lyr, batch, max_seq, 1, m.qk_rope), dt),
+                (lyr, batch, max_seq, m.qk_rope), dt),
         }
     return {
         "k": jax.ShapeDtypeStruct(
@@ -166,8 +169,8 @@ def prefill_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
                       jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
                       "dp", "model", None),
                   "k_rope": act.constrain(
-                      jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0), (0, 0))),
-                      "dp", "model", None, None)}
+                      jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+                      "dp", "model", None)}
         else:
             q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
             o = L.attention(q, kk, v, q_positions=positions,
@@ -217,8 +220,7 @@ def decode_step_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
         blk, window, cache_l = inp
         h = L.rms_norm(x, blk["ln1"])
         if cfg.attn == "mla":
-            m = cfg.mla
-            q_nope, q_rope = L.mla_queries(
+            q_lat, q_rope = L.mla_absorbed_q(
                 blk["attn"], cfg, h, positions[:, None])
             c_kv_new, k_rope_new = L.mla_latents(
                 blk["attn"], cfg, h, positions[:, None])
@@ -226,22 +228,12 @@ def decode_step_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
                 lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
             )(cache_l["c_kv"], c_kv_new, lengths)
             k_rope = jax.vmap(
-                lambda c, u, i: jax.lax.dynamic_update_slice(
-                    c, u, (i, 0, 0))
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
             )(cache_l["k_rope"], k_rope_new, lengths)
-            w_uk = blk["attn"]["w_uk"].reshape(m.kv_lora, cfg.n_heads,
-                                               m.qk_nope)
-            q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk)
-            q_cat = jnp.concatenate([q_lat, q_rope], -1)
-            k_cat = jnp.concatenate([c_kv[:, :, None, :], k_rope], -1)
-            scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
-            o_lat = L.decode_attention(
-                q_cat, k_cat, c_kv[:, :, None, :], lengths=lengths + 1,
-                scale=scale)
-            w_uv = blk["attn"]["w_uv"].reshape(m.kv_lora, cfg.n_heads,
-                                               m.v_head)
-            o = jnp.einsum("bshk,khd->bshd", o_lat, w_uv)
-            a = o.reshape(b, 1, -1) @ blk["attn"]["wo"]
+            o_lat = L.latent_decode_attention(
+                q_lat, q_rope, c_kv, k_rope, lengths=lengths + 1,
+                scale=L.mla_scale(cfg))
+            a = L.mla_out(blk["attn"], cfg, o_lat)
             new_cache = {"c_kv": c_kv, "k_rope": k_rope}
         else:
             q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions[:, None])
@@ -282,13 +274,22 @@ def decode_step_decoder(params: Params, cfg: ArchConfig, tokens: jax.Array,
 
 def paged_cache_leaf_specs(cfg: ArchConfig, page_size: int
                            ) -> dict[str, jax.ShapeDtypeStruct]:
-    """Shape of ONE KV page, layer-stacked: (L, page, Hkv, dh) per leaf.
-    repro.serve.paging.init_pool adds the physical-page pool dimension."""
-    if cfg.attn != "gqa":
-        raise NotImplementedError(
-            "paged serving covers GQA decoders; MLA latent paging is an "
-            "open item (ROADMAP)")
-    shape = (cfg.n_layers, page_size, cfg.n_kv_heads, cfg.head_dim)
+    """Shape of ONE KV page, layer-stacked; repro.serve.paging.init_pool
+    adds the physical-page pool dimension.
+
+    Two cache families behind the same pool/block-table machinery
+    (DESIGN.md §8.5): GQA pages are (L, page, Hkv, dh) per k/v leaf; MLA
+    pages keep the cache COMPRESSED — head-free latent leaves c_kv
+    (L, page, kv_lora) and k_rope (L, page, qk_rope), kv_lora + qk_rope
+    bytes per position vs 2*Hkv*dh for dense KV."""
+    lyr = cfg.n_layers
+    if cfg.attn == "mla":
+        m = cfg.mla
+        return {"c_kv": jax.ShapeDtypeStruct((lyr, page_size, m.kv_lora),
+                                             cfg.dtype),
+                "k_rope": jax.ShapeDtypeStruct((lyr, page_size, m.qk_rope),
+                                               cfg.dtype)}
+    shape = (lyr, page_size, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jax.ShapeDtypeStruct(shape, cfg.dtype),
             "v": jax.ShapeDtypeStruct(shape, cfg.dtype)}
 
@@ -310,7 +311,7 @@ def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
     from repro.kernels.attention import ops as A
 
     b, c = tokens.shape
-    lyr, n_pool, page, hkv, dh = pages["k"].shape
+    page = next(iter(pages.values())).shape[2]
     assert c % page == 0, (c, page)
     pps = block_row.shape[0]
     x = params["embed"][tokens] * jnp.asarray(
@@ -323,22 +324,44 @@ def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
     page_ids = jax.lax.dynamic_slice(block_row, (start // page,),
                                      (c // page,))
 
+    def scatter(pool_l, new):
+        """Write this chunk's C positions as C/page WHOLE pages (PACO
+        leaf-tile scatter, no read-modify-write): new (1, C, *feat)."""
+        return pool_l.at[page_ids].set(
+            new.reshape(c // page, page, *new.shape[2:]))
+
     def body(x, inp):
-        blk, window, k_l, v_l = inp
+        blk, window, pg = inp
         h = L.rms_norm(x, blk["ln1"])
-        q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
-        k_l = k_l.at[page_ids].set(kk.reshape(c // page, page, hkv, dh))
-        v_l = v_l.at[page_ids].set(v.reshape(c // page, page, hkv, dh))
-        # gather the slot's whole context (past pages + this chunk) and
-        # attend causally; unwritten/future positions are masked by the
-        # causal rule (k_pos > q_pos), stale page contents included.
-        k_ctx = A.gather_kv_pages(k_l, block_row[None])
-        v_ctx = A.gather_kv_pages(v_l, block_row[None])
-        o = L.attention(q, k_ctx, v_ctx, q_positions=positions,
-                        k_positions=k_positions, causal=True,
-                        window=window, logit_cap=cfg.softcap_attn,
-                        q_chunk=cfg.q_chunk)
-        a = o.reshape(b, c, -1) @ blk["attn"]["wo"]
+        if cfg.attn == "mla":
+            c_kv, k_rope = L.mla_latents(blk["attn"], cfg, h, positions)
+            pg = {"c_kv": scatter(pg["c_kv"], c_kv),
+                  "k_rope": scatter(pg["k_rope"], k_rope)}
+            # absorbed latent attention over the slot's gathered context
+            # (past pages + this chunk); stale/future page contents are
+            # masked by the causal rule.
+            ck_ctx = A.gather_kv_pages(pg["c_kv"], block_row[None])
+            kr_ctx = A.gather_kv_pages(pg["k_rope"], block_row[None])
+            q_lat, q_rope = L.mla_absorbed_q(blk["attn"], cfg, h, positions)
+            o_lat = L.latent_attention(q_lat, q_rope, ck_ctx, kr_ctx,
+                                       q_positions=positions,
+                                       k_positions=k_positions, causal=True,
+                                       q_chunk=cfg.q_chunk,
+                                       scale=L.mla_scale(cfg))
+            a = L.mla_out(blk["attn"], cfg, o_lat)
+        else:
+            q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
+            pg = {"k": scatter(pg["k"], kk), "v": scatter(pg["v"], v)}
+            # gather the slot's whole context (past pages + this chunk) and
+            # attend causally; unwritten/future positions are masked by the
+            # causal rule (k_pos > q_pos), stale page contents included.
+            k_ctx = A.gather_kv_pages(pg["k"], block_row[None])
+            v_ctx = A.gather_kv_pages(pg["v"], block_row[None])
+            o = L.attention(q, k_ctx, v_ctx, q_positions=positions,
+                            k_positions=k_positions, causal=True,
+                            window=window, logit_cap=cfg.softcap_attn,
+                            q_chunk=cfg.q_chunk)
+            a = o.reshape(b, c, -1) @ blk["attn"]["wo"]
         if "ln1_post" in blk:
             a = L.rms_norm(a, blk["ln1_post"])
         x = x + a
@@ -347,17 +370,17 @@ def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
              else L.apply_mlp(blk["mlp"], cfg, h))
         if "ln2_post" in blk:
             f = L.rms_norm(f, blk["ln2_post"])
-        return act.residual(x + f), (k_l, v_l)
+        return act.residual(x + f), pg
 
-    x, (k_pages, v_pages) = jax.lax.scan(
-        body, x, (params["blocks"], windows, pages["k"], pages["v"]),
+    x, new_pages = jax.lax.scan(
+        body, x, (params["blocks"], windows, pages),
         unroll=flags.scan_unroll(cfg.n_layers))
     x = L.rms_norm(x, params["final_norm"])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = L.mask_vocab(
         L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
         cfg.vocab)
-    return logits[0], {"k": k_pages, "v": v_pages}
+    return logits[0], new_pages
 
 
 def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
@@ -375,7 +398,7 @@ def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
     from repro.kernels.attention import ops as A
 
     b = tokens.shape[0]
-    lyr, n_pool, page, hkv, dh = pages["k"].shape
+    page = next(iter(pages.values())).shape[2]
     x = params["embed"][tokens] * jnp.asarray(
         math.sqrt(cfg.d_model), params["embed"].dtype)  # (B,1,D)
     positions = lengths
@@ -384,15 +407,29 @@ def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
     write_off = lengths % page
 
     def body(x, inp):
-        blk, window, k_l, v_l = inp
+        blk, window, pg = inp
         h = L.rms_norm(x, blk["ln1"])
-        q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions[:, None])
-        k_l = k_l.at[write_page, write_off].set(kk[:, 0])
-        v_l = v_l.at[write_page, write_off].set(v[:, 0])
-        o = A.paged_decode_attention(q, k_l, v_l, block_tables,
-                                     lengths + 1, window=window,
-                                     logit_cap=cfg.softcap_attn)
-        a = o.reshape(b, 1, -1) @ blk["attn"]["wo"]
+        if cfg.attn == "mla":
+            c_kv_new, k_rope_new = L.mla_latents(
+                blk["attn"], cfg, h, positions[:, None])
+            pg = {"c_kv": pg["c_kv"].at[write_page, write_off].set(
+                      c_kv_new[:, 0]),
+                  "k_rope": pg["k_rope"].at[write_page, write_off].set(
+                      k_rope_new[:, 0])}
+            q_lat, q_rope = L.mla_absorbed_q(
+                blk["attn"], cfg, h, positions[:, None])
+            o_lat = A.paged_latent_decode_attention(
+                q_lat, q_rope, pg["c_kv"], pg["k_rope"], block_tables,
+                lengths + 1, scale=L.mla_scale(cfg))
+            a = L.mla_out(blk["attn"], cfg, o_lat)
+        else:
+            q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions[:, None])
+            pg = {"k": pg["k"].at[write_page, write_off].set(kk[:, 0]),
+                  "v": pg["v"].at[write_page, write_off].set(v[:, 0])}
+            o = A.paged_decode_attention(q, pg["k"], pg["v"], block_tables,
+                                         lengths + 1, window=window,
+                                         logit_cap=cfg.softcap_attn)
+            a = o.reshape(b, 1, -1) @ blk["attn"]["wo"]
         if "ln1_post" in blk:
             a = L.rms_norm(a, blk["ln1_post"])
         x = x + a
@@ -401,14 +438,14 @@ def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
              else L.apply_mlp(blk["mlp"], cfg, h))
         if "ln2_post" in blk:
             f = L.rms_norm(f, blk["ln2_post"])
-        return x + f, (k_l, v_l)
+        return x + f, pg
 
-    x, (k_pages, v_pages) = jax.lax.scan(
-        body, x, (params["blocks"], windows, pages["k"], pages["v"]),
+    x, new_pages = jax.lax.scan(
+        body, x, (params["blocks"], windows, pages),
         unroll=flags.scan_unroll(cfg.n_layers))
     x = L.rms_norm(x, params["final_norm"])
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = L.mask_vocab(
         L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
         cfg.vocab)
-    return logits[:, 0], {"k": k_pages, "v": v_pages}
+    return logits[:, 0], new_pages

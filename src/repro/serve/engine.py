@@ -4,11 +4,13 @@ Production shape (DESIGN.md §8): requests queue up; a scheduler admits
 them into fixed decode slots, prefills their prompts in page-aligned
 chunks (one jitted ``prefill_chunk`` call per chunk — NOT one per token),
 and a single fused ``decode_step_paged`` advances every active slot per
-tick.  KV lives in a shared pool of fixed-size pages (leaf tiles of the
-slots x seq x head_dim cuboid, ``paging.paco_page_size``) mapped through
-per-slot block tables; retirement frees pages back to the pool, and pool
-exhaustion preempts the youngest request (its pages freed, the request
-re-queued to resume with identical output).
+tick.  Cache state lives in a shared pool of fixed-size pages (leaf
+tiles of the slots x seq x feat cuboid, ``paging.paco_page_size``)
+mapped through per-slot block tables; retirement frees pages back to
+the pool, and pool exhaustion preempts the youngest request (its pages
+freed, the request re-queued to resume with identical output).  Two
+cache families ride the same scheduler (DESIGN.md §8.5): dense GQA k/v
+pages and compressed MLA latent pages (c_kv/k_rope, feat = kv_lora).
 
 With ``mesh=...`` the engine serves model-parallel: params are placed by
 ``dist.sharding.param_specs``, page pools by
@@ -57,8 +59,11 @@ class ServeEngine:
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
+        # the cache cuboid's per-position feature extent: head_dim for
+        # dense GQA KV, the compressed kv_lora face for MLA latents.
+        feat = cfg.mla.kv_lora if cfg.attn == "mla" else cfg.head_dim
         self.page = page_size or paging.paco_page_size(
-            slots, max_seq, cfg.head_dim)
+            slots, max_seq, feat)
         assert max_seq % self.page == 0, (max_seq, self.page)
         self.pages_per_seq = max_seq // self.page
         # chunk: a few pages per jitted prefill call, dividing max_seq so

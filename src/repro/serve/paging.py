@@ -1,6 +1,8 @@
 """PACO-paged KV cache: fixed-size pages in a pool + per-slot block tables.
 
-The KV cache of a serving engine is the cuboid (slots x seq x head_dim).
+The cache of a serving engine is the cuboid (slots x seq x feat), where
+feat is head_dim for dense GQA KV and kv_lora for MLA latent pools — the
+communication-avoiding small face the paper's cut schedule favours.
 Instead of a dense (slots, max_seq, ...) block per slot, the pool holds
 fixed-size *pages* of ``page_size`` consecutive sequence positions, and
 each slot owns a *block table* mapping its logical position range to
@@ -27,27 +29,33 @@ import numpy as np
 from repro.core import cuboid
 
 
-def paco_page_size(slots: int, max_seq: int, head_dim: int, *,
+def paco_page_size(slots: int, max_seq: int, feat_dim: int, *,
                    pages_per_slot: int = 8) -> int:
-    """Sequence extent of a PACO 1-piece leaf tile of the KV cuboid.
+    """Sequence extent of a PACO 1-piece leaf tile of the cache cuboid.
 
-    Plans the (slots x max_seq x head_dim) cuboid for ``slots *
+    Plans the (slots x max_seq x feat_dim) cuboid for ``slots *
     pages_per_slot`` leaves with ``core.cuboid.plan_mm_1piece`` — the
     longest-dim cut schedule lands most cuts on the (dominant) sequence
     axis — and takes the smallest resulting sequence extent, rounded
-    down to the largest power-of-two divisor of ``max_seq`` so block
-    tables stay rectangular.
+    down to the LARGEST DIVISOR of ``max_seq`` not exceeding it so block
+    tables stay rectangular.  ``feat_dim`` is the per-position feature
+    extent of the cache: head_dim for dense KV, kv_lora for MLA latent
+    pools (the engine passes the family's actual small face).
+
+    The divisor walk must not assume power-of-two ``max_seq``: the old
+    doubling loop (``page *= 2 while max_seq % (page*2) == 0``) stalled
+    at page=1 for every ODD max_seq (e.g. 33, 63 — block tables explode
+    to one entry per token) and undershot any even max_seq with a small
+    2-adic part (36 -> 4 where 6 divides) — pinned by
+    tests/test_serve.py::test_paco_page_size_non_pow2_divisors.
     """
     if max_seq < 2:
         return 1
     p = max(2, slots * pages_per_slot)
-    plan = cuboid.plan_mm_1piece(max(slots, 1), max_seq, max(head_dim, 1), p)
+    plan = cuboid.plan_mm_1piece(max(slots, 1), max_seq, max(feat_dim, 1), p)
     seq_extent = min((c.m for _, c in plan.tiles if c.m > 0),
                      default=max_seq)
-    page = 1
-    while page * 2 <= seq_extent and max_seq % (page * 2) == 0:
-        page *= 2
-    return page
+    return max(d for d in range(1, seq_extent + 1) if max_seq % d == 0)
 
 
 @dataclasses.dataclass

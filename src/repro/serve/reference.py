@@ -25,13 +25,48 @@ from repro.models.transformer import _NO_WINDOW, _layer_windows
 Params = dict[str, Any]
 
 
+def mla_materialized_qkv(p: Params, cfg: ArchConfig, x: jax.Array,
+                         positions: jax.Array
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """NAIVE UNCOMPRESSED MLA: materialize per-head k/v from the latent.
+
+    k[b,s,h] = [W_uk c_kv | k_rope] and v[b,s,h] = W_uv c_kv — the
+    textbook formulation the absorbed-W_uk production path
+    (layers.apply_mla and the latent decode/paging paths) is
+    algebraically equal to: q_lat . c_kv == (q_nope W_uk) . c_kv ==
+    q_nope . (W_uk c_kv).  Deliberately the expensive h*dh-per-position
+    layout: this is the independent oracle the golden test
+    (tests/test_models.py::test_mla_absorbed_matches_uncompressed) and
+    the serve parity suite pin the compressed path against.
+
+    Returns q, k, v shaped (B, S, H, qk_nope + qk_rope) / same / (B, S,
+    H, v_head)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = L.mla_queries(p, cfg, x, positions)
+    c_kv, k_rope = L.mla_latents(p, cfg, x, positions)
+    w_uk = p["w_uk"].reshape(m.kv_lora, h, m.qk_nope)
+    w_uv = p["w_uv"].reshape(m.kv_lora, h, m.v_head)
+    k_nope = jnp.einsum("bsk,khd->bshd", c_kv, w_uk)
+    v = jnp.einsum("bsk,khd->bshd", c_kv, w_uv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, m.qk_rope))], axis=-1)
+    return q, k, v
+
+
 def forward_ref(params: Params, cfg: ArchConfig, tokens: jax.Array
                 ) -> jax.Array:
     """tokens (B, S) -> logits (B, S, V) via a plain per-layer Python loop
-    (no scan, no cache) with oracle attention."""
-    if cfg.family != "decoder" or cfg.attn != "gqa":
+    (no scan, no cache) with oracle attention.  MLA archs run the naive
+    UNCOMPRESSED formulation (materialized per-head k/v) — sharing
+    nothing with the absorbed-latent engine path it checks."""
+    if cfg.family != "decoder" or cfg.attn not in ("gqa", "mla"):
         raise NotImplementedError(
-            "reference decode covers GQA decoders (the paged-engine scope)")
+            "reference decode covers GQA/MLA decoders (the paged-engine "
+            "scope)")
     b, s = tokens.shape
     x = params["embed"][tokens] * jnp.asarray(
         math.sqrt(cfg.d_model), params["embed"].dtype)
@@ -41,7 +76,10 @@ def forward_ref(params: Params, cfg: ArchConfig, tokens: jax.Array
         blk = jax.tree.map(lambda p: p[i], params["blocks"])
         window = None if windows[i] == _NO_WINDOW else windows[i]
         h = L.rms_norm(x, blk["ln1"])
-        q, k, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
+        if cfg.attn == "mla":
+            q, k, v = mla_materialized_qkv(blk["attn"], cfg, h, positions)
+        else:
+            q, k, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
         o = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                           v.transpose(0, 2, 1, 3), causal=True,
                           window=window, logit_cap=cfg.softcap_attn)

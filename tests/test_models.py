@@ -111,6 +111,45 @@ def test_decode_matches_forward_ssm(name):
         np.testing.assert_allclose(lg, full[:, t], atol=2e-3)
 
 
+def test_mla_absorbed_matches_uncompressed():
+    """GOLDEN: the absorbed-W_uk MLA production path (layers.apply_mla —
+    compressed latent attention, queries projected into latent space)
+    must equal the naive UNCOMPRESSED formulation (materialized per-head
+    k/v via W_uk/W_uv, dense softmax).  The two are algebraically
+    identical (q_nope W_uk) . c_kv == q_nope . (W_uk c_kv); this oracle
+    also backs the serve-engine parity suite and the latent decode path
+    (serve.reference.mla_materialized_qkv)."""
+    from repro.kernels.attention.ref import attention_ref
+    from repro.models import layers as L
+    from repro.serve.reference import mla_materialized_qkv
+
+    cfg = get_arch("deepseek-v2-236b").reduced()
+    params = init_params(cfg, KEY)
+    attn = jax.tree.map(lambda p: p[0], params["blocks"])["attn"]
+    b, s = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(11), (b, s, cfg.d_model),
+                          jnp.float32)
+    positions = jnp.arange(s)
+    # absorbed (production): compressed latent attention + W_uv expansion
+    got = L.apply_mla(attn, cfg, x, positions)
+    # naive uncompressed: per-head k/v materialized, dense oracle softmax
+    q, k, v = mla_materialized_qkv(attn, cfg, x, positions)
+    o = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=True)
+    want = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ attn["wo"]
+    np.testing.assert_allclose(got, want, atol=2e-5)
+    # and the absorbed DECODE path (latent_decode_attention) against the
+    # same oracle at the last position
+    q_lat, q_rope = L.mla_absorbed_q(attn, cfg, x[:, -1:],
+                                     jnp.full((b, 1), s - 1))
+    c_kv, k_rope = L.mla_latents(attn, cfg, x, positions)
+    o_dec = L.latent_decode_attention(
+        q_lat, q_rope, c_kv, k_rope,
+        lengths=jnp.full((b,), s, jnp.int32), scale=L.mla_scale(cfg))
+    a_dec = L.mla_out(attn, cfg, o_dec)
+    np.testing.assert_allclose(a_dec[:, 0], want[:, -1], atol=2e-5)
+
+
 def test_encdec_decode_runs():
     cfg = get_arch("seamless-m4t-medium").reduced()
     params = init_params(cfg, KEY)

@@ -148,13 +148,17 @@ def test_parity_arrival_mid_flight(params, cfg):
     _assert_parity(eng, params, cfg, done)
 
 
-@pytest.mark.parametrize("arch", ["gemma2-2b", "olmoe-1b-7b"])
+@pytest.mark.parametrize("arch", ["gemma2-2b", "olmoe-1b-7b",
+                                  "deepseek-v2-236b"])
 def test_parity_window_softcap_moe_archs(arch):
     """End-to-end parity beyond plain GQA: gemma2 (alternating local
-    sliding windows + attn/logit softcaps + post-norms) and olmoe (MoE
-    mlp in the decode scan).  Prompts long enough that the context
-    exceeds the reduced local_window (16), so the traced per-layer
-    window actually masks."""
+    sliding windows + attn/logit softcaps + post-norms), olmoe (MoE
+    mlp in the decode scan), and deepseek-v2 (MLA latent paging: the
+    engine serves compressed head-free c_kv/k_rope pages through the
+    absorbed-W_uk decode path, checked against the naive UNCOMPRESSED
+    re-forward oracle).  Prompts long enough that the context exceeds
+    the reduced local_window (16), so the traced per-layer window
+    actually masks."""
     cfg = dataclasses.replace(get_arch(arch).reduced(),
                               tie_embeddings=False)
     params = init_params(cfg, KEY)
@@ -248,9 +252,135 @@ def test_paco_page_size_properties():
                 (slots, max_seq, page)
 
 
+def test_paco_page_size_non_pow2_divisors():
+    """Regression: the old doubling loop required max_seq % (page*2) == 0
+    at every step, so ANY odd max_seq degenerated to page=1 (a block
+    table entry per token) and even-but-not-pow2 max_seq undershot its
+    largest usable divisor.  The fix takes the largest divisor of
+    max_seq <= the planner's leaf seq extent."""
+    # odd/prime max_seq: must still divide, and must not collapse to 1
+    # when a real divisor fits under the leaf extent
+    for slots, max_seq in [(2, 63), (3, 45), (4, 33), (2, 81)]:
+        page = paco_page_size(slots, max_seq, 64)
+        assert max_seq % page == 0, (slots, max_seq, page)
+        assert page > 1, (slots, max_seq, page)  # 63->{3,7,9,21}, 45->...
+    # even, small 2-adic part: 36 = 4*9 — the old loop stalled at 4 even
+    # when the leaf extent allowed the divisor 6
+    page36 = paco_page_size(2, 36, 64)
+    assert 36 % page36 == 0 and page36 >= 4, page36
+    # prime max_seq has no divisor but itself: page=1 (or max_seq) is the
+    # only legal answer — geometry stays valid, tables just get long
+    for max_seq in (17, 31):
+        page = paco_page_size(4, max_seq, 64)
+        assert max_seq % page == 0, (max_seq, page)
+    # an engine on an odd max_seq must come up with page > 1 and serve
+    cfg = _cfg()
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(params, cfg, slots=2, max_seq=63)
+    assert eng.page > 1 and 63 % eng.page == 0, eng.page
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=3))
+    done = eng.run_until_drained()
+    _assert_parity(eng, params, cfg, done)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent paging (deepseek-v2): compressed pages, preemption, geometry
+# ---------------------------------------------------------------------------
+
+def _mla_cfg():
+    return dataclasses.replace(get_arch("deepseek-v2-236b").reduced(),
+                               tie_embeddings=False)
+
+
+def test_mla_latent_preemption_resumes_identically():
+    """MLA engine under pool pressure with PRIME slot/pool geometry: the
+    youngest request is evicted, re-prefilled (latents recomputed from
+    prompt + generated), and still emits the exact uncompressed-oracle
+    continuation."""
+    cfg = _mla_cfg()
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(params, cfg, slots=3, max_seq=32, page_size=4,
+                      pool_pages=11, prefill_chunk_len=8)  # prime pool
+    for i, p in enumerate([[1, 2, 3, 4, 5], [7, 8, 9], [11, 12]]):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=16))
+    done = eng.run_until_drained()
+    assert len(done) == 3
+    assert eng.stats["preemptions"] >= 1
+    eng.check_page_invariants()
+    assert eng.pool.free_count() == eng.pool.n_pages
+    _assert_parity(eng, params, cfg, done)
+
+
+def test_mla_latent_pages_beat_dense_kv_bytes():
+    """The latent cache family's reason to exist: bytes/token of the
+    compressed c_kv/k_rope leaves must not exceed what dense per-head
+    KV pages would cost for the same config — at FULL deepseek-v2 scale
+    the ratio is (kv_lora + qk_rope) / (2*H*dh) = 576/32768 ~ 1.8%."""
+    from repro.models import paged_cache_leaf_specs
+
+    for cfg in (_mla_cfg(), get_arch("deepseek-v2-236b")):
+        page = 4
+        latent = paged_cache_leaf_specs(cfg, page)
+        assert set(latent) == {"c_kv", "k_rope"}
+        latent_bytes = sum(
+            np.prod(s.shape) * s.dtype.itemsize for s in latent.values()
+        ) / page
+        # dense alternative: materialized per-head k (qk_nope + qk_rope)
+        # and v (v_head) pages, the layout the GQA family stores
+        m = cfg.mla
+        dense_bytes = (cfg.n_layers * cfg.n_heads
+                       * ((m.qk_nope + m.qk_rope) + m.v_head)
+                       * cfg.dtype.itemsize)
+        assert latent_bytes <= dense_bytes, (latent_bytes, dense_bytes)
+    # full scale: the win is >50x
+    cfg = get_arch("deepseek-v2-236b")
+    m = cfg.mla
+    assert (m.kv_lora + m.qk_rope) * 50 < cfg.n_heads * (
+        m.qk_nope + m.qk_rope + m.v_head)
+
+
+def test_mla_engine_chooses_latent_page_geometry():
+    """paco_page_size plans the (slots x seq x kv_lora) cuboid for MLA:
+    the engine's pool leaves are the head-free latent pages."""
+    cfg = _mla_cfg()
+    params = init_params(cfg, KEY)
+    eng = ServeEngine(params, cfg, slots=2, max_seq=16)
+    m = cfg.mla
+    assert eng.pool.pools["c_kv"].shape[-1] == m.kv_lora
+    assert eng.pool.pools["k_rope"].shape[-1] == m.qk_rope
+    assert eng.pool.pools["c_kv"].ndim == 4   # (L, NP+1, page, kv_lora)
+    assert eng.page == paco_page_size(2, 16, m.kv_lora)
+
+
 # ---------------------------------------------------------------------------
 # paged-attention kernel parity (jnp production path + Pallas interpret)
 # ---------------------------------------------------------------------------
+
+
+def test_paged_latent_decode_matches_dense_ref():
+    """MLA latent decode lowering (jnp gather path + Pallas interpret) ==
+    the dense concat-and-broadcast oracle, on a prime page pool with
+    mixed (including zero-page) lengths."""
+    from repro.kernels.attention import (paged_latent_attention_ref,
+                                         paged_latent_decode_attention)
+
+    b, h, kv, rope, page, n_pages, pps = 3, 4, 16, 8, 4, 13, 4
+    scale = 1.0 / np.sqrt(kv + rope)
+    ql = jax.random.normal(KEY, (b, 1, h, kv))
+    qr = jax.random.normal(jax.random.PRNGKey(9), (b, 1, h, rope))
+    ck = jax.random.normal(jax.random.PRNGKey(1), (n_pages, page, kv))
+    kr = jax.random.normal(jax.random.PRNGKey(2), (n_pages, page, rope))
+    bt = jnp.asarray(np.array([[0, 3, 5, 7], [1, 2, 4, 6],
+                               [8, 9, 10, 11]], np.int32))
+    lens = jnp.asarray([5, 16, 1], jnp.int32)
+    ref = paged_latent_attention_ref(ql, qr, ck, kr, bt, lens, scale=scale)
+    out = paged_latent_decode_attention(ql, qr, ck, kr, bt, lens,
+                                        scale=scale)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+    pal = paged_latent_decode_attention(ql, qr, ck, kr, bt, lens,
+                                        scale=scale, use_kernel=True,
+                                        interpret=True)
+    np.testing.assert_allclose(pal, ref, atol=2e-6)
 
 @pytest.mark.parametrize("kw", [
     {}, {"window": 6}, {"logit_cap": 20.0},

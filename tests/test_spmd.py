@@ -187,31 +187,35 @@ def test_elastic_restart_8_to_5_devices():
 def test_paged_serve_sharded_parity():
     """Model-parallel paged decode on a 4x2 host mesh: the sharded engine
     must emit exactly the single-device reference tokens, with prefill
-    still issuing ceil(ctx/chunk) jitted calls per request."""
+    still issuing ceil(ctx/chunk) jitted calls per request.  Covers BOTH
+    cache families: dense GQA KV pages (qwen3) and compressed MLA latent
+    pages (deepseek-v2, absorbed-W_uk decode against replicated
+    c_kv/k_rope pools)."""
     out = run_py("""
         import dataclasses, jax
         from repro.compat import make_mesh
         from repro.configs import get_arch
         from repro.models import init_params
         from repro.serve import Request, ServeEngine, reference_decode
-        cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
-                                  tie_embeddings=False)
-        params = init_params(cfg, jax.random.PRNGKey(0))
         mesh = make_mesh((4, 2), ("data", "model"))
-        eng = ServeEngine(params, cfg, slots=4, max_seq=32,
-                          prefill_chunk_len=8, mesh=mesh)
-        prompts = [[1, 2, 3], [5, 6, 7, 8, 9], [9], [4] * 11, [2, 8]]
-        for i, p in enumerate(prompts):
-            eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
-        done = eng.run_until_drained()
-        assert len(done) == len(prompts)
-        eng.check_page_invariants()
-        for r in done:
-            assert r.prefill_calls == -(-len(r.prompt) // eng.chunk), \\
-                (r.uid, r.prefill_calls)
-            ref = reference_decode(params, cfg, r.prompt,
-                                   max_new_tokens=6, max_seq=32)
-            assert r.out == ref, (r.uid, r.out, ref)
+        for arch in ("qwen3-0.6b", "deepseek-v2-236b"):
+            cfg = dataclasses.replace(get_arch(arch).reduced(),
+                                      tie_embeddings=False)
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            eng = ServeEngine(params, cfg, slots=4, max_seq=32,
+                              prefill_chunk_len=8, mesh=mesh)
+            prompts = [[1, 2, 3], [5, 6, 7, 8, 9], [9], [4] * 11, [2, 8]]
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+            done = eng.run_until_drained()
+            assert len(done) == len(prompts)
+            eng.check_page_invariants()
+            for r in done:
+                assert r.prefill_calls == -(-len(r.prompt) // eng.chunk), \\
+                    (arch, r.uid, r.prefill_calls)
+                ref = reference_decode(params, cfg, r.prompt,
+                                       max_new_tokens=6, max_seq=32)
+                assert r.out == ref, (arch, r.uid, r.out, ref)
         print("OK")
     """)
     assert "OK" in out
@@ -220,14 +224,18 @@ def test_paged_serve_sharded_parity():
 def test_sharded_forward_matches_unsharded():
     """Sharded forward == unsharded forward (the silent-corruption guard).
 
-    Pins the XLA CPU SPMD partitioner miscompile where RoPE's
-    split+concat on tensors fed by sharded matmuls scaled activations by
-    a mesh-axis size (layers.apply_rope now uses the reshape+stack form;
-    norm-scale stacks replicate in dist.sharding.param_specs).  Covers
-    qk-norm (qwen3), softcap/window/tied (gemma2), and MoE (olmoe).
-    KNOWN GAP: MLA (deepseek-v2) still trips the partitioner on
-    multi-axis meshes via its singleton-head rope/concat tensors —
-    tracked in ROADMAP open items, not asserted here.
+    Pins two XLA CPU SPMD partitioner miscompiles, both structural fixes
+    (no pinning): (1) RoPE's split+concat on tensors fed by sharded
+    matmuls scaled activations by a mesh-axis size (layers.apply_rope
+    uses the reshape+stack form; norm-scale stacks replicate in
+    dist.sharding.param_specs); (2) the MLA latent path diverged on
+    multi-axis meshes whenever the [c_kv | k_rope] pair was feature-
+    concatenated or its packed w_dkv output face was cut — fixed by the
+    concat-free decomposed-score formulation (layers.latent_attention),
+    head-free latent layouts, and the MLA weight rules in
+    dist.sharding._mla_weight_spec (DESIGN.md §8.6).  Covers qk-norm
+    (qwen3), softcap/window/tied (gemma2), MoE (olmoe), and MLA + MoE
+    (deepseek-v2) on a multi-axis (4 data x 2 model) mesh.
     """
     out = run_py("""
         import jax, jax.numpy as jnp
@@ -238,7 +246,8 @@ def test_sharded_forward_matches_unsharded():
         mesh = make_mesh((4, 2), ("data", "model"))
         batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
                                               (4, 16), 0, 256)}
-        for name in ("qwen3-0.6b", "gemma2-2b", "olmoe-1b-7b"):
+        for name in ("qwen3-0.6b", "gemma2-2b", "olmoe-1b-7b",
+                     "deepseek-v2-236b"):
             cfg = get_arch(name).reduced()
             params = init_params(cfg, jax.random.PRNGKey(0))
             params_s = jax.device_put(
