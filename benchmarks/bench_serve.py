@@ -1,22 +1,36 @@
-"""Serving benchmark: sustained tok/s + time-to-first-token (TTFT).
+"""Serving benchmark: sustained tok/s, TTFT, prefill tok/s, decode
+latency — fused multi-tick hot loop vs the PR 3 single-tick old path.
 
 Two cache families on the paged continuous-batching engine
 (BENCH_serve.json; re-generate with
 ``PYTHONPATH=src python -m benchmarks.bench_serve --write-baseline``):
 
-  * qwen3-0.6b-reduced (dense GQA KV pages) at slots in {4, 16} — the
-    perf trajectory baseline for the serving path since PR 2;
+  * qwen3-0.6b-reduced (dense GQA KV pages) at slots in {4, 16}.  The
+    slots=16 geometry is measured TWICE — once on the fused multi-tick
+    engine (``decode_ticks`` dispatches, donated pools, device-side
+    sampling) and once with ``fused=False`` (the PR 3 DECODE loop: one
+    jitted single-tick step + one host argmax per token, pool undonated
+    through the decode step) — so the fused path's decode speedup is
+    recorded in the baseline, not just claimed (``decode_speedup_s16``,
+    a top-level payload key).  Both modes share the new prefill path
+    (donated pool, batched first-token sync), so the legacy row's
+    prefill/TTFT columns are NOT a PR 3 measurement — only its decode
+    columns are;
   * deepseek-v2-236b-reduced (compressed MLA latent pages, absorbed-W_uk
     decode) at slots=4 — plus the latent cache's reason to exist:
     cache bytes/token of the c_kv/k_rope leaves vs the dense per-head
     KV layout the GQA family stores (the bench asserts latent <= dense;
     at FULL deepseek-v2 scale the ratio is ~1.8%).
 
-Protocol: compile first (one throwaway request exercises prefill +
-decode), then (a) TTFT = wall time from submit to the first emitted
-token of a single request on an idle engine, min of 3; (b) throughput =
-total generated tokens / wall time draining 2*slots requests of 16 new
-tokens each.
+Protocol: one full warm drain first (compiles prefill + every decode
+table-width bucket the workload reaches), then (a) TTFT = wall time
+from submit to the first emitted token of a single request on an idle
+engine, min of 3; (b) throughput = a timed drain of 2*slots requests of
+16 new tokens each, with the engine's own phase timers giving prefill
+tok/s, decode tok/s, and per-tick decode latency.  The warm drain also
+arms the RECOMPILE GUARD: the fused decode executable cache must not
+grow during the measured drain (same workload, same width buckets —
+growth would mean the hot loop recompiles on tick count or slot churn).
 """
 from __future__ import annotations
 
@@ -34,14 +48,16 @@ from repro.models import init_params, paged_cache_leaf_specs
 from repro.serve import Request, ServeEngine
 
 NEW_TOKENS = 16
+TICKS = 8
 BASELINE = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serve.json"
 
 
-def _engine(arch: str, slots: int) -> ServeEngine:
+def _engine(arch: str, slots: int, fused: bool) -> ServeEngine:
     cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    return ServeEngine(params, cfg, slots=slots, max_seq=64)
+    return ServeEngine(params, cfg, slots=slots, max_seq=64, fused=fused,
+                       ticks_per_dispatch=TICKS)
 
 
 def cache_bytes_per_token(cfg, page: int) -> dict:
@@ -62,12 +78,26 @@ def cache_bytes_per_token(cfg, page: int) -> dict:
     return {"bytes_per_token": actual, "bytes_per_token_dense_kv": dense}
 
 
-def measure(arch: str, slots: int) -> dict:
-    eng = _engine(arch, slots)
-    # compile: one request through prefill + decode + retirement
-    eng.submit(Request(uid=-1, prompt=[1, 2, 3], max_new_tokens=2))
+def _submit_batch(eng: ServeEngine, n_req: int) -> None:
+    for i in range(n_req):
+        eng.submit(Request(uid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
+                           max_new_tokens=NEW_TOKENS))
+
+
+def _reset_phase_stats(eng: ServeEngine) -> None:
+    for k in ("prefill_s", "decode_s", "prefill_tokens", "decode_tokens",
+              "decode_steps", "dispatches", "host_syncs"):
+        eng.stats[k] = type(eng.stats[k])(0)
+
+
+def measure(arch: str, slots: int, fused: bool = True) -> dict:
+    eng = _engine(arch, slots, fused)
+    # warm drain: the SAME workload as the measured drain, so prefill
+    # and every decode width bucket compile here, not in the timing.
+    _submit_batch(eng, 2 * slots)
     eng.run_until_drained()
     eng.done.clear()
+    warm_cache = eng._decode._cache_size() if fused else None
 
     ttft = float("inf")
     for i in range(3):
@@ -80,18 +110,39 @@ def measure(arch: str, slots: int) -> dict:
         eng.done.clear()
 
     n_req = 2 * slots
-    for i in range(n_req):
-        eng.submit(Request(uid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
-                           max_new_tokens=NEW_TOKENS))
+    _submit_batch(eng, n_req)
+    _reset_phase_stats(eng)
     t0 = time.perf_counter()
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
+    if fused:
+        # recompile guard: the measured drain (ticks + admission/
+        # retirement slot churn) must hit only warm executables.
+        assert eng._decode._cache_size() == warm_cache, \
+            ("fused decode recompiled during the measured drain",
+             warm_cache, eng._decode._cache_size())
+    s = eng.stats
     total = sum(len(r.out) for r in done)
     out = {"slots": slots, "requests": n_req, "tokens": total,
+           "fused": fused,
+           "ticks_per_dispatch": TICKS if fused else 1,
            "tok_s": round(total / dt, 1),
            "ttft_ms": round(ttft * 1e3, 2),
+           "prefill_tok_s": round(s["prefill_tokens"]
+                                  / max(s["prefill_s"], 1e-9), 1),
+           "decode_tok_s": round(s["decode_tokens"]
+                                 / max(s["decode_s"], 1e-9), 1),
+           "decode_tick_ms": round(s["decode_s"] * 1e3
+                                   / max(s["decode_steps"], 1), 3),
+           "decode_dispatches": s["dispatches"],
+           # host transfers per generated token: the fused loop syncs
+           # one token block per dispatch, the old path one per token.
+           "decode_tokens_per_sync": round(
+               s["decode_tokens"] / max(s["dispatches"], 1), 1),
            "page_size": eng.page, "prefill_chunk": eng.chunk,
            "pool_pages": eng.pool.n_pages}
+    if fused:
+        out["decode_cache_size"] = warm_cache
     out.update(cache_bytes_per_token(eng.cfg, eng.page))
     # the latent family must never cost more cache than dense KV would
     assert out["bytes_per_token"] <= out["bytes_per_token_dense_kv"], out
@@ -107,6 +158,21 @@ def main() -> dict:
             f"tok_s={r['tok_s']}")
         row(f"serve_qwen3-0.6b_s{slots}_ttft", r["ttft_ms"] * 1e3,
             f"ttft_ms={r['ttft_ms']}")
+        row(f"serve_qwen3-0.6b_s{slots}_prefill_tok_s",
+            1e6 / max(r["prefill_tok_s"], 1e-9),
+            f"prefill_tok_s={r['prefill_tok_s']}")
+        row(f"serve_qwen3-0.6b_s{slots}_decode_tick",
+            r["decode_tick_ms"] * 1e3,
+            f"decode_tok_s={r['decode_tok_s']}")
+    legacy = measure("qwen3-0.6b", 16, fused=False)
+    results["16-legacy"] = legacy
+    row("serve_qwen3-0.6b_s16_legacy_decode_tick",
+        legacy["decode_tick_ms"] * 1e3,
+        f"decode_tok_s={legacy['decode_tok_s']}")
+    speedup = round(results["16"]["decode_tok_s"]
+                    / max(legacy["decode_tok_s"], 1e-9), 2)
+    row("serve_qwen3-0.6b_s16_decode_speedup", 1e6 / max(speedup, 1e-9),
+        f"fused/legacy={speedup}x")
     r = measure("deepseek-v2-236b", 4)
     results["mla"] = r
     row("serve_deepseek-v2_s4_tok_s", 1e6 / max(r["tok_s"], 1e-9),
@@ -115,7 +181,9 @@ def main() -> dict:
         f"ttft_ms={r['ttft_ms']}")
     row("serve_deepseek-v2_cache_bytes_tok", r["bytes_per_token"],
         f"dense_kv={r['bytes_per_token_dense_kv']}")
-    return results
+    # derived scalar kept OUT of the per-geometry rows: 'slots' stays a
+    # homogeneous mapping of row dicts
+    return {"slots": results, "decode_speedup_s16": speedup}
 
 
 if __name__ == "__main__":
@@ -127,12 +195,21 @@ if __name__ == "__main__":
     if args.write_baseline:
         payload = {"arch": "qwen3-0.6b-reduced + deepseek-v2-236b-reduced",
                    "new_tokens": NEW_TOKENS,
+                   "ticks_per_dispatch": TICKS,
+                   "decode_speedup_s16": res["decode_speedup_s16"],
                    "note": "CPU host baseline; absolute numbers are "
                            "machine-dependent — track the trajectory, "
-                           "not the value.  'mla' is the latent-paged "
-                           "deepseek row; bytes_per_token compares its "
-                           "compressed c_kv/k_rope leaves to the dense "
-                           "per-head KV layout it avoids.",
-                   "slots": res}
+                           "not the value.  '16' is the fused multi-tick "
+                           "engine, '16-legacy' reruns the PR 3 "
+                           "single-tick DECODE loop on the same machine "
+                           "(decode_speedup_s16 = fused/legacy decode "
+                           "tok/s; both modes share the new prefill "
+                           "path, so only the legacy row's decode "
+                           "columns are a PR 3 measurement); 'mla' is "
+                           "the latent-paged deepseek row; "
+                           "bytes_per_token compares its compressed "
+                           "c_kv/k_rope leaves to the dense per-head KV "
+                           "layout it avoids.",
+                   "slots": res["slots"]}
         BASELINE.write_text(json.dumps(payload, indent=2) + "\n")
         print(f"wrote {BASELINE}")

@@ -15,12 +15,13 @@ from repro.dist.act_sharding import (active, constrain, dp_size, model_size,
 from repro.dist.pipeline import pipeline_apply, stack_stage_params, \
     stage_ranges
 from repro.dist.sharding import (batch_specs, cache_specs, dp_axes,
-                                 paged_pool_specs, param_specs, to_named)
+                                 paged_pool_specs, param_specs,
+                                 pool_shardings, to_named)
 
 __all__ = [
     "act_sharding", "pipeline", "sharding",
     "active", "constrain", "dp_size", "model_size", "use_mesh_rules",
     "pipeline_apply", "stack_stage_params", "stage_ranges",
     "batch_specs", "cache_specs", "dp_axes", "paged_pool_specs",
-    "param_specs", "to_named",
+    "param_specs", "pool_shardings", "to_named",
 ]

@@ -274,6 +274,23 @@ def paged_pool_specs(cfg, mesh: Mesh, pools: Mapping[str, Any]
     return {name: spec(name, leaf) for name, leaf in pools.items()}
 
 
+def pool_shardings(cfg, mesh: Mesh, pools: Mapping[str, Any]
+                   ) -> dict[str, Any]:
+    """Donation-safe NamedShardings for the serve engine's page pools.
+
+    The engine jits its prefill/decode steps with the pool pytree
+    DONATED (``donate_argnums``), so page writes update the pool
+    in-place instead of copy-on-write.  Donation is only sound when the
+    donated input's layout can be reused for the aliased output, i.e.
+    when input and output shardings are IDENTICAL — so the engine must
+    place the pools with these shardings AND pass the same objects as
+    the jitted step's ``out_shardings`` for the pool subtree.  Routing
+    both through this one helper is what keeps them in lockstep: a spec
+    change here retunes placement and donation together, never one
+    without the other (DESIGN.md §8.7)."""
+    return to_named(mesh, paged_pool_specs(cfg, mesh, pools))
+
+
 def to_named(mesh: Mesh, specs: Any) -> Any:
     """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,

@@ -110,6 +110,217 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, hq, sq, d)
 
 
+def _q_block(c: int, cap: int = 128) -> int:
+    """Largest divisor of the chunk length not exceeding ``cap`` — the
+    q-block extent of the prefill kernels (chunks are page multiples, not
+    necessarily powers of two, so a plain min() would not divide)."""
+    return max(b for b in range(1, min(c, cap) + 1) if c % b == 0)
+
+
+# ---------------------------------------------------------------------------
+# Paged PREFILL kernel (serving): chunked causal attention straight off the
+# page pool — the ROADMAP "paged prefill Pallas kernel" item
+# ---------------------------------------------------------------------------
+
+def _paged_prefill_kernel(start_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, scale: float, bq: int,
+                          page: int, pps: int, window: int | None,
+                          logit_cap: float | None):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (page, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    # q positions are GLOBAL (start + chunk offset): the chunk attends
+    # causally over the slot's whole gathered context, so stale or
+    # not-yet-written page contents (k_pos > q_pos) are masked here.
+    q_pos = start_ref[0] + i * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, page), 0)
+    k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (bq, page), 1)
+    mask = q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "logit_cap", "interpret"))
+def paged_flash_prefill_pallas(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_row: jax.Array,
+                               start: jax.Array, *, scale: float,
+                               window: int | None = None,
+                               logit_cap: float | None = None,
+                               interpret: bool = False) -> jax.Array:
+    """Paged chunked prefill for ONE slot: q (Hq, C, D) at positions
+    [start, start+C) vs page pools (n_pages, page, Hkv, D) indexed by
+    block_row (pages_per_seq,).
+
+    The prefill sibling of ``paged_flash_decode_pallas``: block_row and
+    start ride scalar prefetch so the K/V BlockSpec index_map routes grid
+    step (h, i, j) to physical page ``block_row[j]`` — one (page, D) PACO
+    leaf-tile DMA per step, never a gathered dense (max_seq, D) cache.
+    The grid (Hq, C/bq, pps) is the cut tree of the chunk's
+    queries x keys x head_dim cuboid with the page axis innermost, so the
+    online-softmax (m, l, acc) state stays in VMEM across key pages.
+    Causal masking is GLOBAL (q_pos = start + chunk offset), which also
+    masks stale/future page contents.  Returns (Hq, C, D).
+    """
+    hq, c, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    g = hq // hkv
+    pps = block_row.shape[0]
+    bq = _q_block(c)
+    grid = (hq, c // bq, pps)
+    start = jnp.asarray(start, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, scale=scale, bq=bq,
+                          page=page, pps=pps, window=window,
+                          logit_cap=logit_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, d),
+                             lambda h, i, j, st, bt: (h, i, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda h, i, j, st, bt: (bt[j], 0, h // g, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda h, i, j, st, bt: (bt[j], 0, h // g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, d),
+                                   lambda h, i, j, st, bt: (h, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),   # running max
+                pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+                pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((hq, c, d), q.dtype),
+        interpret=interpret,
+    )(start, block_row, q, k_pages, v_pages)
+
+
+def _paged_latent_prefill_kernel(start_ref, bt_ref, ql_ref, qr_ref,
+                                 ckv_ref, kr_ref, o_ref, m_ref, l_ref,
+                                 acc_ref, *, scale: float, bq: int, h: int,
+                                 page: int, pps: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[...].astype(jnp.float32)         # (bq*H, kv_lora)
+    qr = qr_ref[...].astype(jnp.float32)         # (bq*H, qk_rope)
+    ckv = ckv_ref[0].astype(jnp.float32)         # (page, kv_lora)
+    kr = kr_ref[0].astype(jnp.float32)           # (page, qk_rope)
+    # decomposed scores (no latent-pair concat; see DESIGN.md §8.6)
+    s = (jnp.dot(ql, ckv.T, preferred_element_type=jnp.float32)
+         + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)) * scale
+    # row r of the flattened (bq*H) q block is position r // H
+    q_pos = start_ref[0] + i * bq + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 0) // h
+    k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq*H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+    # the latent IS the value
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, ckv, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_latent_prefill_pallas(q_lat: jax.Array, q_rope: jax.Array,
+                                ckv_pages: jax.Array, kr_pages: jax.Array,
+                                block_row: jax.Array, start: jax.Array, *,
+                                scale: float,
+                                interpret: bool = False) -> jax.Array:
+    """Paged MLA latent prefill for ONE slot: q_lat (C, H, kv_lora) +
+    q_rope (C, H, qk_rope) at positions [start, start+C) vs head-free
+    latent pools indexed by block_row (pages_per_seq,).
+
+    The MQA extreme of the prefill kernel: all H heads share one latent
+    key/value, so heads fold into the q-block rows (grid (C/bq, pps))
+    and each step DMAs one (page, kv_lora + qk_rope) latent leaf tile —
+    the smallest face the PACO cut schedule offers.  Scores use the
+    decomposed q_lat·c_kv + q_rope·k_rope form; the latent doubles as
+    the value (W_uv expansion happens outside).  Returns (C, H, kv_lora).
+    """
+    c, h, kv_lora = q_lat.shape
+    rope = q_rope.shape[-1]
+    page = ckv_pages.shape[1]
+    pps = block_row.shape[0]
+    bq = _q_block(c, cap=max(1, 128 // h))
+    grid = (c // bq, pps)
+    start = jnp.asarray(start, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_paged_latent_prefill_kernel, scale=scale, bq=bq,
+                          h=h, page=page, pps=pps),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bq * h, kv_lora),
+                             lambda i, j, st, bt: (i, 0)),
+                pl.BlockSpec((bq * h, rope),
+                             lambda i, j, st, bt: (i, 0)),
+                pl.BlockSpec((1, page, kv_lora),
+                             lambda i, j, st, bt: (bt[j], 0, 0)),
+                pl.BlockSpec((1, page, rope),
+                             lambda i, j, st, bt: (bt[j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bq * h, kv_lora),
+                                   lambda i, j, st, bt: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq * h, 1), jnp.float32),       # running max
+                pltpu.VMEM((bq * h, 1), jnp.float32),       # running denom
+                pltpu.VMEM((bq * h, kv_lora), jnp.float32),  # latent acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((c * h, kv_lora), q_lat.dtype),
+        interpret=interpret,
+    )(start, block_row, q_lat.reshape(c * h, kv_lora),
+      q_rope.reshape(c * h, rope), ckv_pages, kr_pages)
+    return out.reshape(c, h, kv_lora)
+
+
 # ---------------------------------------------------------------------------
 # Paged decode kernel (serving): block-table-indexed KV page pool
 # ---------------------------------------------------------------------------

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels.attention.attention import (
     flash_attention_pallas, paged_flash_decode_pallas,
-    paged_latent_decode_pallas)
+    paged_flash_prefill_pallas, paged_latent_decode_pallas,
+    paged_latent_prefill_pallas)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -38,6 +39,82 @@ def gather_kv_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
     b, pps = block_tables.shape
     page = pages.shape[1]
     return pages[block_tables].reshape(b, pps * page, *pages.shape[2:])
+
+
+def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_row: jax.Array,
+                            start: jax.Array, *, window: int | None = None,
+                            logit_cap: float | None = None,
+                            q_chunk: int = 1024,
+                            use_kernel: bool = False,
+                            interpret: bool = False) -> jax.Array:
+    """Chunked prefill for ONE slot straight off the paged KV cache.
+
+    q: (1, C, Hq, D) the chunk's queries at global positions
+    [start, start+C); k_pages/v_pages: (n_pages, page, Hkv, D);
+    block_row: (pages_per_seq,) int32.  Returns (1, C, Hq, D).
+
+    The jnp path gathers the slot's pages through the block row and runs
+    the chunked online-softmax attention (models.layers.attention, so
+    the activation-sharding constraints of meshed serving still apply);
+    ``use_kernel=True`` lowers to the Pallas kernel with
+    scalar-prefetched (start, block_row) — one (page, D) leaf-tile DMA
+    per grid step, no gathered dense cache.  Dense oracle:
+    ``ref.paged_prefill_ref``.
+    """
+    if use_kernel:
+        _, c, hq, d = q.shape
+        o = paged_flash_prefill_pallas(
+            q[0].transpose(1, 0, 2), k_pages, v_pages, block_row, start,
+            scale=1.0 / math.sqrt(d), window=window, logit_cap=logit_cap,
+            interpret=interpret)
+        return o.transpose(1, 0, 2)[None].astype(q.dtype)
+    from repro.models import layers as L  # lazy: models imports kernels
+
+    c = q.shape[1]
+    pps = block_row.shape[0]
+    page = k_pages.shape[1]
+    k_ctx = gather_kv_pages(k_pages, block_row[None])   # (1, S, Hkv, D)
+    v_ctx = gather_kv_pages(v_pages, block_row[None])
+    return L.attention(q, k_ctx, v_ctx,
+                       q_positions=start + jnp.arange(c),
+                       k_positions=jnp.arange(pps * page), causal=True,
+                       window=window, logit_cap=logit_cap, q_chunk=q_chunk)
+
+
+def paged_latent_prefill_attention(q_lat: jax.Array, q_rope: jax.Array,
+                                   ckv_pages: jax.Array,
+                                   kr_pages: jax.Array,
+                                   block_row: jax.Array, start: jax.Array,
+                                   *, scale: float, q_chunk: int = 1024,
+                                   use_kernel: bool = False,
+                                   interpret: bool = False) -> jax.Array:
+    """Chunked MLA latent prefill for ONE slot off the COMPRESSED pools.
+
+    q_lat: (1, C, H, kv_lora) absorbed-W_uk queries; q_rope: (1, C, H,
+    qk_rope); head-free latent pools + block_row (pages_per_seq,).
+    Returns (1, C, H, kv_lora) — expanded through W_uv by the caller.
+    jnp path: gather + layers.latent_attention (decomposed scores);
+    ``use_kernel=True`` lowers to the Pallas latent prefill kernel.
+    Dense oracle: ``ref.paged_latent_prefill_ref``.
+    """
+    if use_kernel:
+        _, c, h, kv = q_lat.shape
+        o = paged_latent_prefill_pallas(
+            q_lat[0], q_rope[0], ckv_pages, kr_pages, block_row, start,
+            scale=scale, interpret=interpret)
+        return o[None].astype(q_lat.dtype)
+    from repro.models import layers as L  # lazy: models imports kernels
+
+    c = q_lat.shape[1]
+    pps = block_row.shape[0]
+    page = ckv_pages.shape[1]
+    ck_ctx = gather_kv_pages(ckv_pages, block_row[None])  # (1, S, kv_lora)
+    kr_ctx = gather_kv_pages(kr_pages, block_row[None])
+    return L.latent_attention(q_lat, q_rope, ck_ctx, kr_ctx,
+                              q_positions=start + jnp.arange(c),
+                              k_positions=jnp.arange(pps * page),
+                              causal=True, q_chunk=q_chunk, scale=scale)
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,

@@ -74,6 +74,80 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
     return o.astype(q.dtype)
 
 
+def paged_prefill_ref(q: jax.Array, k_pages: jax.Array,
+                      v_pages: jax.Array, block_row: jax.Array,
+                      start: jax.Array, *, window: int | None = None,
+                      logit_cap: float | None = None,
+                      scale: float | None = None) -> jax.Array:
+    """Dense oracle for the paged chunked-prefill path.
+
+    q: (1, C, Hq, D) one chunk of one slot at global positions
+    [start, start+C); k_pages/v_pages: (n_pages, page, Hkv, D) pools;
+    block_row: (pages_per_seq,) the slot's page map.  Materializes the
+    slot's whole gathered cache and runs dense f32 softmax with the
+    GLOBAL causal mask (q_pos = start + offset) — stale/future page
+    contents are masked exactly as the kernel masks them.  The
+    correctness anchor for ops.paged_prefill_attention and
+    paged_flash_prefill_pallas (tests/test_serve.py).  Returns
+    (1, C, Hq, D)."""
+    _, c, hq, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    pps = block_row.shape[0]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = k_pages[block_row].reshape(1, pps * page, hkv, d)
+    v = v_pages[block_row].reshape(1, pps * page, hkv, d)
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    q_pos = start + jnp.arange(c)[:, None]
+    k_pos = jnp.arange(pps * page)[None, :]
+    mask = q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_latent_prefill_ref(q_lat: jax.Array, q_rope: jax.Array,
+                             ckv_pages: jax.Array, kr_pages: jax.Array,
+                             block_row: jax.Array, start: jax.Array, *,
+                             scale: float) -> jax.Array:
+    """Dense oracle for the paged MLA latent chunked-prefill path.
+
+    q_lat: (1, C, H, kv_lora); q_rope: (1, C, H, qk_rope); head-free
+    latent pools ckv_pages (n_pages, page, kv_lora) / kr_pages (n_pages,
+    page, qk_rope); block_row (pages_per_seq,).  Deliberately the
+    formulation the production path avoids: gathers the latent pages,
+    CONCATENATES the latent pair into per-position keys, BROADCASTS them
+    to every head, and runs dense f32 softmax under the global causal
+    mask.  Returns (1, C, H, kv_lora)."""
+    _, c, h, kv = q_lat.shape
+    page = ckv_pages.shape[1]
+    pps = block_row.shape[0]
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)
+    dk = q.shape[-1]
+    ck = ckv_pages[block_row].reshape(1, pps * page, -1)
+    kr = kr_pages[block_row].reshape(1, pps * page, -1)
+    k = jnp.concatenate([ck, kr], axis=-1)           # (1, S, kv+rope)
+    k = jnp.broadcast_to(k[:, :, None, :], (1, k.shape[1], h, dk))
+    v = jnp.broadcast_to(ck[:, :, None, :],
+                         (1, ck.shape[1], h, ck.shape[-1]))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = start + jnp.arange(c)[:, None]
+    k_pos = jnp.arange(pps * page)[None, :]
+    s = jnp.where((q_pos >= k_pos)[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return o.astype(q_lat.dtype)
+
+
 def paged_latent_attention_ref(q_lat: jax.Array, q_rope: jax.Array,
                                ckv_pages: jax.Array, kr_pages: jax.Array,
                                block_tables: jax.Array,

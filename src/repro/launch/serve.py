@@ -35,6 +35,18 @@ def main() -> None:
                          "smaller values exercise preemption)")
     ap.add_argument("--chunk", type=int, default=None,
                     help="prefill chunk length (jitted tokens per call)")
+    ap.add_argument("--ticks-per-dispatch", type=int, default=8,
+                    help="decode steps fused into one jitted dispatch "
+                         "(default 8).  Throughput/latency tradeoff: each "
+                         "dispatch runs N steps on-device and syncs ONE "
+                         "(N, slots) token block to the host, so larger N "
+                         "amortizes dispatch + host-sync overhead over "
+                         "more tokens (higher tok/s) but delays token "
+                         "visibility and admission/retirement decisions "
+                         "by up to N ticks and speculatively maps up to "
+                         "N positions of pages per slot (more preemption "
+                         "under a tight pool).  1 = lowest latency, "
+                         "per-token scheduling.")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL host mesh, e.g. 4x2 (default: none)")
     args = ap.parse_args()
@@ -50,9 +62,11 @@ def main() -> None:
     engine = ServeEngine(params, cfg, slots=args.slots,
                          max_seq=args.max_seq, page_size=args.page_size,
                          pool_pages=args.pool_pages,
-                         prefill_chunk_len=args.chunk, mesh=mesh)
+                         prefill_chunk_len=args.chunk, mesh=mesh,
+                         ticks_per_dispatch=args.ticks_per_dispatch)
     print(f"{cfg.name}: slots={args.slots} page={engine.page} "
-          f"chunk={engine.chunk} pool={engine.pool.n_pages} pages"
+          f"chunk={engine.chunk} pool={engine.pool.n_pages} pages "
+          f"ticks/dispatch={engine.ticks}"
           + (f" mesh={dict(mesh.shape)}" if mesh else ""))
     for i in range(args.requests):
         engine.submit(Request(uid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
@@ -70,7 +84,9 @@ def main() -> None:
           f"({total / dt:.1f} tok/s); prefill calls="
           f"{engine.stats['prefill_calls']} (<=ceil(len/chunk) per admit: "
           f"{'ok' if budget_ok else 'VIOLATED'}), decode steps="
-          f"{engine.stats['decode_steps']}, "
+          f"{engine.stats['decode_steps']} in "
+          f"{engine.stats['dispatches']} dispatches "
+          f"({engine.stats['host_syncs']} host syncs), "
           f"preemptions={engine.stats['preemptions']}")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out[:8]}")

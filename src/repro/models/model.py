@@ -189,6 +189,24 @@ def decode_step_paged(params: Params, cfg: ArchConfig, tokens: jax.Array,
     raise NotImplementedError(cfg.family)
 
 
+def decode_ticks(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 pages: Params, block_tables: jax.Array,
+                 lengths: jax.Array, active: jax.Array, budget: jax.Array,
+                 eos: jax.Array, keys: jax.Array, *, max_seq: int,
+                 top_k: int | None = None, temperature: float = 1.0,
+                 null_page: int | None = None
+                 ) -> tuple[jax.Array, Params]:
+    """N fused decode ticks in one dispatch with device-side sampling ->
+    (token block (N, B), pages); see transformer.decode_ticks_decoder."""
+    if cfg.family == "decoder":
+        return TF.decode_ticks_decoder(params, cfg, tokens, pages,
+                                       block_tables, lengths, active,
+                                       budget, eos, keys, max_seq=max_seq,
+                                       top_k=top_k, temperature=temperature,
+                                       null_page=null_page)
+    raise NotImplementedError(cfg.family)
+
+
 def param_count(params: Params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
 

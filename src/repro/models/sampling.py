@@ -1,0 +1,38 @@
+"""Device-side token sampling for the serving decode loop.
+
+The fused multi-tick decode (``models.decode_ticks``) samples INSIDE the
+jitted scan so no logits ever cross to the host — the host receives one
+small (ticks, slots) token block per dispatch instead of one (slots,
+vocab) logits sync per token.  Greedy argmax is the engine-parity
+default (bit-identical to the host-side ``np.asarray(jnp.argmax(...))``
+it replaces); top-k adds temperature-scaled categorical sampling over
+the k largest logits with a per-tick PRNG key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, *, key: jax.Array | None = None,
+                  top_k: int | None = None,
+                  temperature: float = 1.0) -> jax.Array:
+    """logits (B, V) -> sampled token ids (B,) int32.
+
+    ``top_k=None``: greedy argmax (deterministic; ``key`` unused).
+    ``top_k=k``: sample from softmax(top-k logits / temperature) — the
+    gather through ``jax.lax.top_k`` keeps the categorical over k values
+    rather than the full (possibly padded) vocab, so masked/padded vocab
+    entries (-inf from ``layers.mask_vocab``) can never be drawn for any
+    k <= vocab.
+    """
+    if top_k is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "top-k sampling needs a PRNG key"
+    assert temperature > 0, \
+        "temperature must be > 0 for top-k sampling (use top_k=None for " \
+        "greedy decoding instead of temperature=0)"
+    vals, idx = jax.lax.top_k(logits, top_k)
+    choice = jax.random.categorical(key, vals / temperature, axis=-1)
+    return jnp.take_along_axis(
+        idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)

@@ -313,12 +313,10 @@ def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
     b, c = tokens.shape
     page = next(iter(pages.values())).shape[2]
     assert c % page == 0, (c, page)
-    pps = block_row.shape[0]
     x = params["embed"][tokens] * jnp.asarray(
         math.sqrt(cfg.d_model), params["embed"].dtype)
     x = act.batch_seq(x)
     positions = start + jnp.arange(c)
-    k_positions = jnp.arange(pps * page)
     windows = _layer_windows(cfg, cfg.n_layers)
     # pages this chunk fills: block_row[start/page : start/page + C/page]
     page_ids = jax.lax.dynamic_slice(block_row, (start // page,),
@@ -337,30 +335,24 @@ def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
             c_kv, k_rope = L.mla_latents(blk["attn"], cfg, h, positions)
             pg = {"c_kv": scatter(pg["c_kv"], c_kv),
                   "k_rope": scatter(pg["k_rope"], k_rope)}
-            # absorbed latent attention over the slot's gathered context
+            # absorbed latent attention straight off the slot's pages
             # (past pages + this chunk); stale/future page contents are
-            # masked by the causal rule.
-            ck_ctx = A.gather_kv_pages(pg["c_kv"], block_row[None])
-            kr_ctx = A.gather_kv_pages(pg["k_rope"], block_row[None])
+            # masked by the global causal rule inside the paged op.
             q_lat, q_rope = L.mla_absorbed_q(blk["attn"], cfg, h, positions)
-            o_lat = L.latent_attention(q_lat, q_rope, ck_ctx, kr_ctx,
-                                       q_positions=positions,
-                                       k_positions=k_positions, causal=True,
-                                       q_chunk=cfg.q_chunk,
-                                       scale=L.mla_scale(cfg))
+            o_lat = A.paged_latent_prefill_attention(
+                q_lat, q_rope, pg["c_kv"], pg["k_rope"], block_row, start,
+                scale=L.mla_scale(cfg), q_chunk=cfg.q_chunk)
             a = L.mla_out(blk["attn"], cfg, o_lat)
         else:
             q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
             pg = {"k": scatter(pg["k"], kk), "v": scatter(pg["v"], v)}
-            # gather the slot's whole context (past pages + this chunk) and
-            # attend causally; unwritten/future positions are masked by the
-            # causal rule (k_pos > q_pos), stale page contents included.
-            k_ctx = A.gather_kv_pages(pg["k"], block_row[None])
-            v_ctx = A.gather_kv_pages(pg["v"], block_row[None])
-            o = L.attention(q, k_ctx, v_ctx, q_positions=positions,
-                            k_positions=k_positions, causal=True,
-                            window=window, logit_cap=cfg.softcap_attn,
-                            q_chunk=cfg.q_chunk)
+            # paged-prefill attention over the slot's whole context (past
+            # pages + this chunk); unwritten/future positions are masked
+            # by the causal rule (k_pos > q_pos), stale contents included.
+            # Pallas lowering: kernels.attention.paged_flash_prefill_pallas.
+            o = A.paged_prefill_attention(
+                q, pg["k"], pg["v"], block_row, start, window=window,
+                logit_cap=cfg.softcap_attn, q_chunk=cfg.q_chunk)
             a = o.reshape(b, c, -1) @ blk["attn"]["wo"]
         if "ln1_post" in blk:
             a = L.rms_norm(a, blk["ln1_post"])
@@ -383,17 +375,24 @@ def prefill_chunk_decoder(params: Params, cfg: ArchConfig,
     return logits[0], new_pages
 
 
-def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
-                              tokens: jax.Array, pages: Params,
-                              block_tables: jax.Array, lengths: jax.Array
-                              ) -> tuple[jax.Array, Params]:
-    """Fused decode over every slot against the shared page pool.
+def _paged_tick(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                pages: Params, block_tables: jax.Array, lengths: jax.Array,
+                write_mask: jax.Array | None = None,
+                null_page: int | None = None
+                ) -> tuple[jax.Array, Params]:
+    """One fused paged decode tick over all slots (the shared body of
+    ``decode_step_paged_decoder`` and ``decode_ticks_decoder``).
 
     tokens (B, 1); block_tables (B, pages_per_seq); lengths (B,) current
     context length per slot (the new token lands at position lengths).
-    Inactive slots ride along pointed at the pool's null page — no
-    per-slot Python, one compiled step per tick.  Returns
-    (logits (B, V), updated pages).
+    ``write_mask`` (B,) bool routes masked-off slots' cache writes to the
+    pool's null page — ``null_page`` as told by the pool owner
+    (serve.paging ``PagePool.null_page``; the last-physical-page
+    fallback matches ``init_pool``'s layout) — their pages and lengths
+    are untouched, which is how the multi-tick scan freezes slots that
+    retire mid-block.  ``write_mask=None`` writes every slot, matching
+    the block tables the engine builds (inactive slots' rows already
+    point at the null page).  Returns (logits (B, V), updated pages).
     """
     from repro.kernels.attention import ops as A
 
@@ -403,8 +402,15 @@ def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
         math.sqrt(cfg.d_model), params["embed"].dtype)  # (B,1,D)
     positions = lengths
     windows = _layer_windows(cfg, cfg.n_layers)
+    # block_tables may be width-sliced to the live context (the engine
+    # caps the jnp gather's materialization); out-of-range rows of
+    # masked-off slots clamp and are then routed to the null page.
     write_page = block_tables[jnp.arange(b), lengths // page]  # (B,)
     write_off = lengths % page
+    if write_mask is not None:
+        if null_page is None:
+            null_page = next(iter(pages.values())).shape[1] - 1
+        write_page = jnp.where(write_mask, write_page, null_page)
 
     def body(x, inp):
         blk, window, pg = inp
@@ -449,3 +455,73 @@ def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
         L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
         cfg.vocab)
     return logits[:, 0], new_pages
+
+
+def decode_step_paged_decoder(params: Params, cfg: ArchConfig,
+                              tokens: jax.Array, pages: Params,
+                              block_tables: jax.Array, lengths: jax.Array
+                              ) -> tuple[jax.Array, Params]:
+    """Fused decode over every slot against the shared page pool.
+
+    tokens (B, 1); block_tables (B, pages_per_seq); lengths (B,) current
+    context length per slot (the new token lands at position lengths).
+    Inactive slots ride along pointed at the pool's null page — no
+    per-slot Python, one compiled step per tick.  Returns
+    (logits (B, V), updated pages).
+    """
+    return _paged_tick(params, cfg, tokens, pages, block_tables, lengths)
+
+
+def decode_ticks_decoder(params: Params, cfg: ArchConfig,
+                         tokens: jax.Array, pages: Params,
+                         block_tables: jax.Array, lengths: jax.Array,
+                         active: jax.Array, budget: jax.Array,
+                         eos: jax.Array, keys: jax.Array, *, max_seq: int,
+                         top_k: int | None = None,
+                         temperature: float = 1.0,
+                         null_page: int | None = None
+                         ) -> tuple[jax.Array, Params]:
+    """Fused MULTI-tick decode: N decode steps in one dispatch.
+
+    A ``jax.lax.scan`` over ``decode_step_paged``'s tick body with
+    device-side sampling (``models.sampling.sample_tokens``), cache
+    append, block-table advance, and per-slot retirement flags — the
+    host syncs ONE small (N, slots) token block per dispatch instead of
+    one logits argmax per token (DESIGN.md §8.7).
+
+    tokens (B,) last emitted token per slot (its KV lands on the slot's
+    first tick); lengths (B,) cache positions written; active (B,) bool;
+    budget (B,) int32 remaining new-token budget; eos (B,) int32 per-slot
+    eos id (-1 = never); keys (N, 2) uint32 per-tick PRNG keys (unused
+    for greedy).  A slot whose emitted token triggers retirement —
+    budget exhausted, eos, or context reaching ``max_seq`` (exactly the
+    scheduler's ``_emit`` rule) — flips inactive: later ticks freeze its
+    token/length and route its cache writes to the null page, so it
+    rides along at zero semantic cost until the host retires it.
+
+    Returns (toks (N, B) int32, updated pages); toks[t, s] is the token
+    slot s emitted at tick t, -1 where the slot was already inactive —
+    the host replays its retirement rule over the block, which agrees
+    with the device flags by construction.
+    """
+    from repro.models.sampling import sample_tokens
+
+    def tick(carry, key):
+        toks, lens, act, bud, pg = carry
+        logits, pg = _paged_tick(params, cfg, toks[:, None], pg,
+                                 block_tables, lens, write_mask=act,
+                                 null_page=null_page)
+        nxt = sample_tokens(logits, key=key, top_k=top_k,
+                            temperature=temperature)
+        nxt = jnp.where(act, nxt, toks)        # freeze inactive lanes
+        lens = lens + act                      # the old token's KV landed
+        bud = bud - act
+        # _emit's retirement rule on the just-emitted token: after the
+        # emit, prompt+out == lens + 1 (the new token's KV is unwritten)
+        done = (bud <= 0) | (nxt == eos) | (lens + 1 >= max_seq)
+        out_t = jnp.where(act, nxt, -1)
+        return (nxt, lens, act & ~done, bud, pg), out_t
+
+    (_, _, _, _, pages), toks = jax.lax.scan(
+        tick, (tokens, lengths, active, budget, pages), keys)
+    return toks, pages

@@ -3,25 +3,32 @@
 Production shape (DESIGN.md §8): requests queue up; a scheduler admits
 them into fixed decode slots, prefills their prompts in page-aligned
 chunks (one jitted ``prefill_chunk`` call per chunk — NOT one per token),
-and a single fused ``decode_step_paged`` advances every active slot per
-tick.  Cache state lives in a shared pool of fixed-size pages (leaf
-tiles of the slots x seq x feat cuboid, ``paging.paco_page_size``)
-mapped through per-slot block tables; retirement frees pages back to
-the pool, and pool exhaustion preempts the youngest request (its pages
-freed, the request re-queued to resume with identical output).  Two
-cache families ride the same scheduler (DESIGN.md §8.5): dense GQA k/v
-pages and compressed MLA latent pages (c_kv/k_rope, feat = kv_lora).
+and advances every active slot with FUSED MULTI-TICK decode dispatches:
+one jitted ``decode_ticks`` call runs ``ticks_per_dispatch`` decode
+steps on-device — sampling, cache append, block-table advance, and
+retirement flags included — so the host syncs one small (ticks, slots)
+token block per dispatch instead of one argmax per token.  Cache state
+lives in a shared pool of fixed-size pages (leaf tiles of the
+slots x seq x feat cuboid, ``paging.paco_page_size``) mapped through
+per-slot block tables; the pool pytree is DONATED through both jitted
+steps, so page writes land in-place rather than copy-on-write.
+Retirement frees pages back to the pool, and pool exhaustion preempts
+the youngest request (its pages freed, the request re-queued to resume
+with identical output).  Two cache families ride the same scheduler
+(DESIGN.md §8.5): dense GQA k/v pages and compressed MLA latent pages
+(c_kv/k_rope, feat = kv_lora).
 
 With ``mesh=...`` the engine serves model-parallel: params are placed by
 ``dist.sharding.param_specs``, page pools by
-``dist.sharding.paged_pool_specs``, and both steps are traced under
-``dist.act_sharding.use_mesh_rules`` so the planner's activation cuts
-apply on any device count.
+``dist.sharding.pool_shardings`` (the same shardings double as the
+jitted steps' pool ``out_shardings`` so donation stays layout-stable),
+and both steps are traced under ``dist.act_sharding.use_mesh_rules``.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Any
 
@@ -30,8 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import decode_step_paged, paged_cache_leaf_specs, \
-    prefill_chunk
+from repro.models import decode_step_paged, decode_ticks, \
+    paged_cache_leaf_specs, prefill_chunk, sample_tokens
 from repro.serve import paging
 
 Params = Any
@@ -49,13 +56,41 @@ class Request:
     preemptions: int = 0
 
 
+def _width_bucket(width: int, pages_per_seq: int) -> int:
+    """Round a live block-table width up to a power of two (clamped to
+    the full table) so decode compilations stay O(log pages_per_seq)
+    rather than one per distinct live length."""
+    b = 1
+    while b < width:
+        b *= 2
+    return min(b, pages_per_seq)
+
+
 class ServeEngine:
-    """Paged continuous-batching engine (decoder-family archs)."""
+    """Paged continuous-batching engine (decoder-family archs).
+
+    ``ticks_per_dispatch`` sets how many decode steps one jitted
+    dispatch fuses (DESIGN.md §8.7): larger values amortize dispatch +
+    host-sync overhead over more tokens (throughput) at the cost of up
+    to that many speculative page mappings per slot and token-block
+    latency (a token is visible to the host only at the end of its
+    dispatch).  ``fused=False`` keeps the PR 3 single-tick DECODE loop
+    (one dispatch + one host argmax per token, pool undonated through
+    the decode step) — the old-path decode baseline
+    ``benchmarks/bench_serve.py`` records; the prefill path (donated
+    pool, batched first-token sync) is shared by both modes, so only
+    the decode columns compare old-vs-new like for like.
+    ``top_k``/``temperature`` switch the device-side sampler from
+    greedy argmax to top-k categorical (``models.sample_tokens``).
+    """
 
     def __init__(self, params: Params, cfg: ArchConfig, *, slots: int = 4,
                  max_seq: int = 128, page_size: int | None = None,
                  pool_pages: int | None = None,
-                 prefill_chunk_len: int | None = None, mesh=None):
+                 prefill_chunk_len: int | None = None, mesh=None,
+                 ticks_per_dispatch: int = 8, fused: bool = True,
+                 top_k: int | None = None, temperature: float = 1.0,
+                 seed: int = 0):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -76,6 +111,9 @@ class ServeEngine:
         assert prefill_chunk_len % self.page == 0
         assert max_seq % prefill_chunk_len == 0
         self.chunk = prefill_chunk_len
+        assert ticks_per_dispatch >= 1, ticks_per_dispatch
+        self.ticks = ticks_per_dispatch
+        self.fused = fused
         n_pages = (pool_pages if pool_pages is not None
                    else slots * self.pages_per_seq)
         assert n_pages >= self.pages_per_seq, \
@@ -86,14 +124,17 @@ class ServeEngine:
                                          self.pool.null_page)
 
         self.mesh = mesh
+        pool_out = None
+        tok_out = None
         if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
             from repro.dist import sharding as D
             params = jax.device_put(
                 params, D.to_named(mesh, D.param_specs(cfg, params, mesh)))
-            self.pool.pools = jax.device_put(
-                self.pool.pools,
-                D.to_named(mesh, D.paged_pool_specs(cfg, mesh,
-                                                    self.pool.pools)))
+            pool_out = D.pool_shardings(cfg, mesh, self.pool.pools)
+            self.pool.pools = jax.device_put(self.pool.pools, pool_out)
+            tok_out = NamedSharding(mesh, PartitionSpec())
         self.params = params
 
         self.active: list[Request | None] = [None] * slots
@@ -106,14 +147,42 @@ class ServeEngine:
         self._last_tok = [0] * slots
         self._admit_order = [-1] * slots
         self._admit_seq = 0
+        self._key = jax.random.PRNGKey(seed)
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
-                      "preemptions": 0, "retired": 0}
+                      "preemptions": 0, "retired": 0, "dispatches": 0,
+                      "host_syncs": 0, "max_table_width": 0,
+                      "prefill_tokens": 0, "decode_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
 
-        self._prefill = jax.jit(
-            lambda p, t, s, pg, row: prefill_chunk(p, cfg, t, s, pg, row))
-        self._decode = jax.jit(
-            lambda p, t, pg, bt, ln: decode_step_paged(p, cfg, t, pg, bt,
-                                                       ln))
+        def _prefill_fn(p, toks, start, last, key, pg, row):
+            logits, pg = prefill_chunk(p, cfg, toks, start, pg, row)
+            tok = sample_tokens(logits[last][None], key=key, top_k=top_k,
+                                temperature=temperature)
+            return tok[0], pg
+
+        null_page = self.pool.null_page
+
+        def _decode_fn(p, toks, pg, bt, lens, act, bud, eos, keys):
+            return decode_ticks(p, cfg, toks, pg, bt, lens, act, bud,
+                                eos, keys, max_seq=max_seq, top_k=top_k,
+                                temperature=temperature,
+                                null_page=null_page)
+
+        # the pool pytree is DONATED through both hot-loop steps: page
+        # writes are in-place pool updates, never copy-on-write of the
+        # whole pool (tests pin this via .is_deleted() on the inputs).
+        out_sh = {} if mesh is None else \
+            {"out_shardings": (tok_out, pool_out)}
+        self._prefill = jax.jit(_prefill_fn, donate_argnums=(5,), **out_sh)
+        self._decode = jax.jit(_decode_fn, donate_argnums=(2,), **out_sh)
+        if not fused:
+            # PR 3 old DECODE path: one undonated single-tick step per
+            # token, full-width tables, host-side argmax — kept as the
+            # benchmark baseline the fused decode loop is measured
+            # against (prefill stays on the shared donated path).
+            self._decode1 = jax.jit(
+                lambda p, t, pg, bt, ln: decode_step_paged(p, cfg, t, pg,
+                                                           bt, ln))
 
     # -- plumbing -----------------------------------------------------------
 
@@ -122,6 +191,10 @@ class ServeEngine:
             return contextlib.nullcontext()
         from repro.dist import act_sharding
         return act_sharding.use_mesh_rules(self.mesh)
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
 
     def submit(self, req: Request) -> None:
         if not (1 <= len(req.prompt) < self.max_seq):
@@ -137,7 +210,10 @@ class ServeEngine:
 
     def _emit(self, req: Request, tok: int) -> bool:
         """Record a generated token; True when the request retires (eos,
-        token budget, or context hitting max_seq — truncation)."""
+        token budget, or context hitting max_seq — truncation).  The
+        device-side flag logic in ``decode_ticks`` mirrors this rule
+        exactly, so the host and the fused scan agree on when a slot
+        stops emitting."""
         req.out.append(tok)
         return (len(req.out) >= req.max_new_tokens or tok == req.eos_id
                 or len(req.prompt) + len(req.out) >= self.max_seq)
@@ -175,7 +251,11 @@ class ServeEngine:
         """Fill free slots from the queue head (FIFO).  Admission needs
         pages for every padded prefill chunk up front; if the pool can't
         supply them the queue waits (decode-time exhaustion, not
-        admission, triggers preemption)."""
+        admission, triggers preemption).  Each admitted slot's prefill
+        returns its first sampled token as a DEVICE array; one batched
+        sync at the end folds them all into host slot state — no
+        per-request ``int(...)`` round-trip."""
+        pending: list[tuple[int, jax.Array]] = []
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
@@ -190,77 +270,185 @@ class ServeEngine:
             self.active[slot] = req
             self._admit_order[slot] = self._admit_seq
             self._admit_seq += 1
-            self._prefill_slot(slot, req, ctx)
+            pending.append((slot, self._prefill_slot(slot, req, ctx)))
+        if pending:
+            t0 = time.perf_counter()
+            toks = np.asarray(jnp.stack([t for _, t in pending]))
+            self.stats["host_syncs"] += 1
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            for (slot, _), tok in zip(pending, toks):
+                req = self.active[slot]
+                tok = int(tok)
+                self._last_tok[slot] = tok
+                if self._emit(req, tok):
+                    self._retire(slot)
 
     def _prefill_slot(self, slot: int, req: Request,
-                      ctx: list[int]) -> None:
+                      ctx: list[int]) -> jax.Array:
         """Chunked prefill: ceil(len(ctx)/chunk) jitted calls, each
         ingesting a whole page-aligned chunk (the per-token teacher-forced
-        loop this replaces cost len(ctx) device round-trips)."""
-        row = self.tables.row_device(slot)
-        logits = None
+        loop this replaces cost len(ctx) device round-trips).  Each call
+        gets the block row SLICED to the chunk's live page extent
+        (power-of-two bucket, like decode's table slicing) so the jnp
+        gather path materializes O(width*page) context, not O(max_seq).
+        Returns the first sampled token as a DEVICE scalar — the caller
+        folds it into slot state at the batched sync point."""
+        last = jnp.asarray((len(ctx) - 1) % self.chunk, jnp.int32)
+        key = self._next_key()
+        tok = None
+        t0 = time.perf_counter()
         with self._mesh_cm():
             for i in range(0, len(ctx), self.chunk):
+                width = _width_bucket(-(-(i + self.chunk) // self.page),
+                                      self.pages_per_seq)
+                self.stats["max_table_width"] = max(
+                    self.stats["max_table_width"], width)
+                row = jnp.asarray(self.tables.row(slot)[:width])
                 toks = ctx[i:i + self.chunk]
                 toks = toks + [0] * (self.chunk - len(toks))
-                logits, self.pool.pools = self._prefill(
+                tok, self.pool.pools = self._prefill(
                     self.params, jnp.asarray([toks], jnp.int32),
-                    jnp.asarray(i, jnp.int32), self.pool.pools, row)
+                    jnp.asarray(i, jnp.int32), last, key,
+                    self.pool.pools, row)
                 req.prefill_calls += 1
                 self.stats["prefill_calls"] += 1
-        last = (len(ctx) - 1) % self.chunk
-        tok = int(jnp.argmax(logits[last]))
+        self.stats["prefill_tokens"] += len(ctx)
+        self.stats["prefill_s"] += time.perf_counter() - t0
         self._ctx_len[slot] = len(ctx)
-        self._last_tok[slot] = tok
-        if self._emit(req, tok):
-            self._retire(slot)
+        return tok
 
-    def _ensure_decode_pages(self) -> None:
-        """Every active slot needs a mapped page for its next write
-        position; exhaustion preempts the youngest active request until
-        the allocation succeeds (oldest-first service order)."""
+    def _ensure_decode_pages(self, n: int = 1) -> None:
+        """Every active slot needs mapped pages for its next ``n`` write
+        positions (capped by its remaining token budget and max_seq);
+        exhaustion preempts the youngest active request until the
+        allocation succeeds (oldest-first service order, so the oldest
+        request always progresses and a lone survivor can always map —
+        the pool holds at least one full sequence)."""
         order = sorted((s for s in range(self.slots)
                         if self.active[s] is not None),
                        key=lambda s: self._admit_order[s])
         for slot in order:
             if self.active[slot] is None:   # preempted below
                 continue
-            idx = self._ctx_len[slot] // self.page
-            if self.tables.row(slot)[idx] != self.tables.null_page:
-                continue
-            while True:
-                got = self.pool.alloc(1)
-                if got is not None:
-                    self.tables.assign(slot, idx, got)
+            for idx in range(*self._write_page_range(slot, n)):
+                if self.active[slot] is None:
                     break
-                victim = self._youngest_active()
-                self._preempt(victim)
-                if victim == slot:
-                    break
+                if self.tables.row(slot)[idx] != self.tables.null_page:
+                    continue
+                while True:
+                    got = self.pool.alloc(1)
+                    if got is not None:
+                        self.tables.assign(slot, idx, got)
+                        break
+                    victim = self._youngest_active()
+                    self._preempt(victim)
+                    if victim == slot:
+                        break
+
+    def _planned_writes(self, slot: int, n: int) -> int:
+        """How many of the next ``n`` ticks this slot can actually write:
+        capped by the remaining token budget and the last writable
+        position (max_seq - 2 — the tick that writes it emits the
+        retiring token)."""
+        req = self.active[slot]
+        ctx = self._ctx_len[slot]
+        return max(1, min(n, req.max_new_tokens - len(req.out),
+                          (self.max_seq - 1) - ctx))
+
+    def _write_page_range(self, slot: int, n: int) -> tuple[int, int]:
+        """Half-open block-table index range slot will write over the
+        next ``n`` ticks: positions [ctx, ctx + _planned_writes)."""
+        ctx = self._ctx_len[slot]
+        w = self._planned_writes(slot, n)
+        return ctx // self.page, (ctx + w - 1) // self.page + 1
 
     def tick(self) -> int:
-        """Admit + one fused decode step for all slots; returns #retired."""
+        """Admit + one decode dispatch (``ticks_per_dispatch`` fused
+        steps; a single step on the legacy path); returns #retired."""
         self._admit()
         if all(r is None for r in self.active):
             return 0
-        self._ensure_decode_pages()
+        n = self.ticks if self.fused else 1
+        self._ensure_decode_pages(n)
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return 0
+        if not self.fused:
+            return self._dispatch_legacy(live)
+        # clamp the block to the largest per-slot write plan (power-of-
+        # two bucket, mirroring the table-width buckets, so scan-length
+        # compiles stay O(log ticks)): a drain tail of short-budget
+        # stragglers doesn't run whole-model ticks with every lane
+        # frozen.
+        n_eff = min(n, _width_bucket(
+            max(self._planned_writes(s, n) for s in live), n))
+        return self._dispatch_fused(live, n_eff)
+
+    def _dispatch_fused(self, live: list[int], n: int) -> int:
+        """One fused decode dispatch: n on-device ticks, ONE host sync."""
+        width = _width_bucket(
+            max(self._write_page_range(s, n)[1] for s in live),
+            self.pages_per_seq)
+        self.stats["max_table_width"] = max(
+            self.stats["max_table_width"], width)
+        bt = self.tables.device_view(width)
+        toks = jnp.asarray(self._last_tok, jnp.int32)
+        lens = jnp.asarray(self._ctx_len, jnp.int32)
+        act = jnp.asarray([r is not None for r in self.active])
+        bud = jnp.asarray([r.max_new_tokens - len(r.out) if r else 0
+                           for r in self.active], jnp.int32)
+        eos = jnp.asarray([r.eos_id if r else -1 for r in self.active],
+                          jnp.int32)
+        keys = jax.random.split(self._next_key(), n)
+        t0 = time.perf_counter()
+        with self._mesh_cm():
+            block, self.pool.pools = self._decode(
+                self.params, toks, self.pool.pools, bt, lens, act, bud,
+                eos, keys)
+        block = np.asarray(block)   # THE one device->host sync per block
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += n
+        self.stats["dispatches"] += 1
+        self.stats["host_syncs"] += 1
+        finished = 0
+        for slot in live:
+            req = self.active[slot]
+            for t in range(n):
+                tok = int(block[t, slot])
+                self._ctx_len[slot] += 1   # that tick wrote last_tok's KV
+                self._last_tok[slot] = tok
+                self.stats["decode_tokens"] += 1
+                if self._emit(req, tok):
+                    # the device flag flipped this slot inactive at the
+                    # same tick (decode_ticks mirrors _emit); later
+                    # block[t', slot] entries are -1 filler.
+                    self._retire(slot)
+                    finished += 1
+                    break
+        return finished
+
+    def _dispatch_legacy(self, live: list[int]) -> int:
+        """PR 3 hot loop: single tick, full tables, host argmax."""
         toks = jnp.asarray(self._last_tok, jnp.int32)[:, None]
         lens = jnp.asarray(self._ctx_len, jnp.int32)
+        self.stats["max_table_width"] = self.pages_per_seq
+        t0 = time.perf_counter()
         with self._mesh_cm():
-            logits, self.pool.pools = self._decode(
+            logits, self.pool.pools = self._decode1(
                 self.params, toks, self.pool.pools, self.tables.device(),
                 lens)
-        self.stats["decode_steps"] += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        self.stats["dispatches"] += 1
+        self.stats["host_syncs"] += 1
         finished = 0
         for slot in live:
             req = self.active[slot]
             self._ctx_len[slot] += 1   # last_tok's KV was just written
             tok = int(nxt[slot])
             self._last_tok[slot] = tok
+            self.stats["decode_tokens"] += 1
             if self._emit(req, tok):
                 self._retire(slot)
                 finished += 1

@@ -121,30 +121,39 @@ class BlockTables:
     def __init__(self, slots: int, pages_per_seq: int, null_page: int):
         self.null_page = null_page
         self._np = np.full((slots, pages_per_seq), null_page, np.int32)
-        self._dev: jax.Array | None = None
+        self._dev: dict[int, jax.Array] = {}
 
     def assign(self, slot: int, first: int, pages: list[int]) -> None:
         self._np[slot, first:first + len(pages)] = pages
-        self._dev = None
+        self._dev.clear()
 
     def clear(self, slot: int) -> list[int]:
         """Reset a slot's row to the null page; returns the freed pages."""
         row = self._np[slot]
         pages = [int(p) for p in row if p != self.null_page]
         row[:] = self.null_page
-        self._dev = None
+        self._dev.clear()
         return pages
 
     def row(self, slot: int) -> np.ndarray:
         return self._np[slot]
 
-    def row_device(self, slot: int) -> jax.Array:
-        return jnp.asarray(self._np[slot])
-
     def device(self) -> jax.Array:
-        if self._dev is None:
-            self._dev = jnp.asarray(self._np)
-        return self._dev
+        return self.device_view(self._np.shape[1])
+
+    def device_view(self, width: int) -> jax.Array:
+        """(slots, width) device copy of the first ``width`` table columns.
+
+        The engine slices the tables to the live-context page extent
+        (bucketed so compilations stay bounded) before each decode
+        dispatch: the jnp paged-gather fallback materializes
+        O(slots * width * page) cache bytes, so capping width to the
+        live length — instead of always gathering all pages_per_seq —
+        is the allocation fix tests pin via ``stats['max_table_width']``.
+        Views are cached per width until the mapping changes."""
+        if width not in self._dev:
+            self._dev[width] = jnp.asarray(self._np[:, :width])
+        return self._dev[width]
 
     def live_pages(self, slot: int) -> list[int]:
         return [int(p) for p in self._np[slot] if p != self.null_page]
