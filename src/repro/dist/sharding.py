@@ -291,6 +291,29 @@ def pool_shardings(cfg, mesh: Mesh, pools: Mapping[str, Any]
     return to_named(mesh, paged_pool_specs(cfg, mesh, pools))
 
 
+def verify_shardings(cfg, mesh: Mesh, pools: Mapping[str, Any]
+                     ) -> tuple[Any, Any, Any, Any]:
+    """Output shardings for the speculative VERIFY dispatch: the
+    (steps, slots, window) token block, the (steps, slots)
+    accepted-draft counts, the (slots, max_seq) token history, and the
+    donated page pools.
+
+    The token block, accepted counts, and history are REPLICATED: small
+    int32 state consumed by the host scheduler (the history stays
+    device-resident between dispatches), and every model-axis shard
+    computes the same argmax (the verify logits are resolved to
+    replicated vocab rows by the same final constraint the decode tick
+    uses).  The pools reuse
+    ``pool_shardings`` — the verify step donates the pool pytree exactly
+    like the decode step, so its placement and the jit's
+    ``out_shardings`` must come from the same specs or donation silently
+    degrades to a copy (DESIGN.md §8.7); routing the verify step through
+    this helper keeps the speculative and non-speculative hot loops in
+    lockstep on any mesh."""
+    return (NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()), pool_shardings(cfg, mesh, pools))
+
+
 def to_named(mesh: Mesh, specs: Any) -> Any:
     """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,

@@ -7,11 +7,15 @@ from repro.kernels.attention.ops import (flash_attention, gather_kv_pages,
                                          paged_decode_attention,
                                          paged_latent_decode_attention,
                                          paged_latent_prefill_attention,
-                                         paged_prefill_attention)
+                                         paged_latent_verify_attention,
+                                         paged_prefill_attention,
+                                         paged_verify_attention)
 from repro.kernels.attention.ref import (attention_ref, paged_attention_ref,
                                          paged_latent_attention_ref,
                                          paged_latent_prefill_ref,
-                                         paged_prefill_ref)
+                                         paged_latent_verify_ref,
+                                         paged_prefill_ref,
+                                         paged_verify_ref)
 
 __all__ = [
     "flash_attention_pallas", "paged_flash_decode_pallas",
@@ -19,7 +23,9 @@ __all__ = [
     "paged_latent_prefill_pallas",
     "flash_attention", "gather_kv_pages", "paged_decode_attention",
     "paged_latent_decode_attention", "paged_latent_prefill_attention",
-    "paged_prefill_attention",
+    "paged_latent_verify_attention", "paged_prefill_attention",
+    "paged_verify_attention",
     "attention_ref", "paged_attention_ref", "paged_latent_attention_ref",
-    "paged_latent_prefill_ref", "paged_prefill_ref",
+    "paged_latent_prefill_ref", "paged_latent_verify_ref",
+    "paged_prefill_ref", "paged_verify_ref",
 ]

@@ -117,6 +117,115 @@ def paged_latent_prefill_attention(q_lat: jax.Array, q_rope: jax.Array,
                               causal=True, q_chunk=q_chunk, scale=scale)
 
 
+def paged_verify_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           window: int | None = None,
+                           logit_cap: float | None = None,
+                           scale: float | None = None,
+                           use_kernel: bool = False,
+                           interpret: bool = False) -> jax.Array:
+    """Speculative-verify attention: a W-token window PER SLOT against
+    the paged KV cache (the verify half of DESIGN.md §8.8).
+
+    q: (B, W, Hq, D) — slot b's queries sit at global positions
+    ``lengths[b] + t`` for t in [0, W): the last emitted token followed
+    by its drafted continuation, whose K/V the caller has already
+    scattered into the pool at those positions.  k_pages/v_pages:
+    (n_pages, page, Hkv, D); block_tables: (B, pages_per_seq) int32;
+    lengths: (B,).  Returns (B, W, Hq, Dhv).
+
+    The jnp path is ``paged_decode_attention``'s exact op sequence —
+    same gather, same grouped-Hkv einsum contraction, same
+    mask/softcap/softmax ops — generalized to W query positions with a
+    per-position causal mask (key position <= lengths[b] + t).  Keeping
+    the formulation IDENTICAL to the decode tick is what makes greedy
+    speculation bit-identical to the fused non-speculative engine
+    (same logits at every accepted position, hence the same argmax and
+    the same residual stream feeding every later layer's cache write);
+    the W=1, mask-equal case IS the decode path, which
+    tests/test_speculative.py pins bitwise.  ``use_kernel=True`` reuses
+    the PR 4 paged-PREFILL Pallas kernel (multi-token causal paged
+    attention is exactly its job), vmapped over slots with per-slot
+    (start=lengths[b], block row) scalar prefetch.  Dense oracle:
+    ``ref.paged_verify_ref``.
+    """
+    b, w, hq, d = q.shape
+    _, page, hkv, dhv = v_pages.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if use_kernel:
+        o = jax.vmap(
+            lambda qb, row, st: paged_flash_prefill_pallas(
+                qb.transpose(1, 0, 2), k_pages, v_pages, row, st,
+                scale=scale, window=window, logit_cap=logit_cap,
+                interpret=interpret))(q, block_tables, lengths)
+        return o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, W, Hq, D)
+    k = gather_kv_pages(k_pages, block_tables)   # (B, S, Hkv, D)
+    v = gather_kv_pages(v_pages, block_tables)
+    s = k.shape[1]
+    qr = q.reshape(b, w, hkv, g, d)
+    scores = jnp.einsum("bwhgd,bshd->bwhgs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        scores = jnp.tanh(scores / logit_cap) * logit_cap
+    pos = jnp.arange(s)
+    q_pos = lengths[:, None] + jnp.arange(w)[None, :]        # (B, W)
+    mask = pos[None, None, :] <= q_pos[:, :, None]           # (B, W, S)
+    if window is not None:
+        mask &= pos[None, None, :] > (q_pos[:, :, None] - window)
+    scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    wts = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bwhgs,bshd->bwhgd", wts, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, w, hq, dhv).astype(q.dtype)
+
+
+def paged_latent_verify_attention(q_lat: jax.Array, q_rope: jax.Array,
+                                  ckv_pages: jax.Array,
+                                  kr_pages: jax.Array,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array, *, scale: float,
+                                  use_kernel: bool = False,
+                                  interpret: bool = False) -> jax.Array:
+    """Speculative-verify attention against a COMPRESSED (MLA latent)
+    paged cache: a W-token window per slot at positions lengths[b] + t.
+
+    q_lat: (B, W, H, kv_lora) absorbed-W_uk queries; q_rope: (B, W, H,
+    qk_rope); head-free latent pools; returns (B, W, H, kv_lora),
+    expanded through W_uv by the caller.  Same contract as
+    ``paged_verify_attention``: the jnp path is
+    ``paged_latent_decode_attention``'s decomposed-score op sequence
+    (q_lat·c_kv + q_rope·k_rope, no feature concat — DESIGN.md §8.6)
+    with a per-position causal mask, so the W=1 case is bitwise the
+    decode tick; ``use_kernel=True`` vmaps the PR 4 latent-prefill
+    Pallas kernel over slots.  Dense oracle:
+    ``ref.paged_latent_verify_ref``.
+    """
+    b, w, h, kv = q_lat.shape
+    if use_kernel:
+        o = jax.vmap(
+            lambda ql, qr, row, st: paged_latent_prefill_pallas(
+                ql, qr, ckv_pages, kr_pages, row, st, scale=scale,
+                interpret=interpret))(q_lat, q_rope, block_tables, lengths)
+        return o.astype(q_lat.dtype)                 # (B, W, H, kv_lora)
+    ck = gather_kv_pages(ckv_pages, block_tables)    # (B, S, kv_lora)
+    kr = gather_kv_pages(kr_pages, block_tables)     # (B, S, qk_rope)
+    s = ck.shape[1]
+    scores = (jnp.einsum("bqhk,bsk->bhqs", q_lat, ck,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr,
+                           preferred_element_type=jnp.float32)) * scale
+    pos = jnp.arange(s)
+    q_pos = lengths[:, None] + jnp.arange(w)[None, :]        # (B, W)
+    mask = pos[None, None, :] <= q_pos[:, :, None]           # (B, W, S)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)   # (B,H,W,S)
+    wts = jax.nn.softmax(scores, axis=-1).astype(ck.dtype)
+    out = jnp.einsum("bhqs,bsk->bqhk", wts, ck,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_lat.dtype)                   # (B, W, H, kv_lora)
+
+
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array, *,

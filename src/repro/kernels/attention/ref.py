@@ -114,6 +114,38 @@ def paged_prefill_ref(q: jax.Array, k_pages: jax.Array,
     return o.astype(q.dtype)
 
 
+def paged_verify_ref(q: jax.Array, k_pages: jax.Array,
+                     v_pages: jax.Array, block_tables: jax.Array,
+                     lengths: jax.Array, *, window: int | None = None,
+                     logit_cap: float | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Dense oracle for the speculative-verify path: each slot's W-token
+    window (queries at global positions lengths[b] + t) re-expressed as
+    one ``paged_prefill_ref`` call per slot over its own block row.
+    q: (B, W, Hq, D); returns (B, W, Hq, D)."""
+    outs = [paged_prefill_ref(q[i][None], k_pages, v_pages,
+                              block_tables[i], lengths[i], window=window,
+                              logit_cap=logit_cap, scale=scale)[0]
+            for i in range(q.shape[0])]
+    return jnp.stack(outs)
+
+
+def paged_latent_verify_ref(q_lat: jax.Array, q_rope: jax.Array,
+                            ckv_pages: jax.Array, kr_pages: jax.Array,
+                            block_tables: jax.Array, lengths: jax.Array,
+                            *, scale: float) -> jax.Array:
+    """Dense oracle for the MLA latent speculative-verify path: one
+    ``paged_latent_prefill_ref`` call (concat-and-broadcast formulation,
+    deliberately what the production path avoids) per slot.
+    q_lat: (B, W, H, kv_lora); returns (B, W, H, kv_lora)."""
+    outs = [paged_latent_prefill_ref(q_lat[i][None], q_rope[i][None],
+                                     ckv_pages, kr_pages,
+                                     block_tables[i], lengths[i],
+                                     scale=scale)[0]
+            for i in range(q_lat.shape[0])]
+    return jnp.stack(outs)
+
+
 def paged_latent_prefill_ref(q_lat: jax.Array, q_rope: jax.Array,
                              ckv_pages: jax.Array, kr_pages: jax.Array,
                              block_row: jax.Array, start: jax.Array, *,

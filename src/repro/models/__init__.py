@@ -1,13 +1,15 @@
+from repro.models.draft import draft_ngram_propose
 from repro.models.model import (
     init_params, forward, loss_fn, cache_spec, init_cache, decode_step,
     prefill, paged_cache_leaf_specs, prefill_chunk, decode_step_paged,
-    decode_ticks, param_count, active_param_count,
+    decode_ticks, verify_ticks, param_count, active_param_count,
 )
 from repro.models.sampling import sample_tokens
 
 __all__ = [
     "init_params", "forward", "loss_fn", "cache_spec", "init_cache",
     "decode_step", "prefill", "paged_cache_leaf_specs", "prefill_chunk",
-    "decode_step_paged", "decode_ticks", "sample_tokens",
+    "decode_step_paged", "decode_ticks", "verify_ticks",
+    "draft_ngram_propose", "sample_tokens",
     "param_count", "active_param_count",
 ]

@@ -207,6 +207,31 @@ def decode_ticks(params: Params, cfg: ArchConfig, tokens: jax.Array,
     raise NotImplementedError(cfg.family)
 
 
+def verify_ticks(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 pages: Params, block_tables: jax.Array,
+                 lengths: jax.Array, active: jax.Array, budget: jax.Array,
+                 eos: jax.Array, history: jax.Array,
+                 write_limit: jax.Array, steps: jax.Array, *,
+                 max_seq: int, draft_len: int, ngram: int = 2,
+                 null_page: int | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, Params]:
+    """N fused SPECULATIVE decode steps in one dispatch: device-side
+    n-gram drafting, one batched paged verify forward per step, greedy
+    acceptance with rollback of rejected writes -> (token blocks
+    (N, B, draft_len + 1), accepted-draft counts (N, B), updated
+    history, pages); see transformer.verify_ticks_decoder.
+    Greedy-only: tokens and non-null pool contents are bit-identical to
+    the non-speculative ``decode_ticks`` engine."""
+    if cfg.family == "decoder":
+        return TF.verify_ticks_decoder(params, cfg, tokens, pages,
+                                       block_tables, lengths, active,
+                                       budget, eos, history, write_limit,
+                                       steps, max_seq=max_seq,
+                                       draft_len=draft_len, ngram=ngram,
+                                       null_page=null_page)
+    raise NotImplementedError(cfg.family)
+
+
 def param_count(params: Params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
 

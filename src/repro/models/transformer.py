@@ -525,3 +525,213 @@ def decode_ticks_decoder(params: Params, cfg: ArchConfig,
     (_, _, _, _, pages), toks = jax.lax.scan(
         tick, (tokens, lengths, active, budget, pages), keys)
     return toks, pages
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: batched paged verify of device-drafted windows
+# ---------------------------------------------------------------------------
+
+def _verify_window(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                   pages: Params, block_tables: jax.Array,
+                   lengths: jax.Array, write_page: jax.Array,
+                   write_off: jax.Array) -> tuple[jax.Array, Params]:
+    """One speculative VERIFY forward: W window tokens per slot in one
+    pass (the multi-token sibling of ``_paged_tick``'s body).
+
+    tokens (B, W): slot b's last emitted token followed by its W-1
+    drafted continuation tokens, at global positions lengths[b] + t.
+    write_page/write_off (B, W): per-position pool coordinates as routed
+    by the caller (out-of-plan positions already point at the null
+    page).  Every layer scatters the window's K/V (or MLA latents) into
+    the pool, then attends through the paged VERIFY attention — the
+    decode tick's exact op sequence generalized to W query positions
+    (kernels/attention/ops.paged_verify_attention), which is what keeps
+    each accepted position's logits AND residual stream bit-identical
+    to the non-speculative tick that would have produced them.  Returns
+    (logits (B, W, V), updated pages); the caller computes greedy
+    acceptance and rolls back the rejected tail
+    (``verify_ticks_decoder``).
+    """
+    from repro.kernels.attention import ops as A
+
+    b, w = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), params["embed"].dtype)      # (B, W, D)
+    positions = lengths[:, None] + jnp.arange(w)[None, :]   # (B, W)
+    windows = _layer_windows(cfg, cfg.n_layers)
+
+    def body(x, inp):
+        blk, window, pg = inp
+        h = L.rms_norm(x, blk["ln1"])
+        if cfg.attn == "mla":
+            c_kv_new, k_rope_new = L.mla_latents(
+                blk["attn"], cfg, h, positions)
+            pg = {"c_kv": pg["c_kv"].at[write_page, write_off].set(
+                      c_kv_new),
+                  "k_rope": pg["k_rope"].at[write_page, write_off].set(
+                      k_rope_new)}
+            q_lat, q_rope = L.mla_absorbed_q(blk["attn"], cfg, h,
+                                             positions)
+            o_lat = A.paged_latent_verify_attention(
+                q_lat, q_rope, pg["c_kv"], pg["k_rope"], block_tables,
+                lengths, scale=L.mla_scale(cfg))
+            a = L.mla_out(blk["attn"], cfg, o_lat)
+        else:
+            q, kk, v = L.gqa_qkv(blk["attn"], cfg, h, positions)
+            pg = {"k": pg["k"].at[write_page, write_off].set(kk),
+                  "v": pg["v"].at[write_page, write_off].set(v)}
+            o = A.paged_verify_attention(q, pg["k"], pg["v"],
+                                         block_tables, lengths,
+                                         window=window,
+                                         logit_cap=cfg.softcap_attn)
+            a = o.reshape(b, w, -1) @ blk["attn"]["wo"]
+        if "ln1_post" in blk:
+            a = L.rms_norm(a, blk["ln1_post"])
+        x = x + a
+        h = L.rms_norm(x, blk["ln2"])
+        f = (M.apply_moe(blk["mlp"], cfg, h) if cfg.moe
+             else L.apply_mlp(blk["mlp"], cfg, h))
+        if "ln2_post" in blk:
+            f = L.rms_norm(f, blk["ln2_post"])
+        return x + f, pg
+
+    x, new_pages = jax.lax.scan(
+        body, x, (params["blocks"], windows, pages),
+        unroll=flags.scan_unroll(cfg.n_layers))
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.mask_vocab(
+        L.softcap((x @ head).astype(jnp.float32), cfg.softcap_logits),
+        cfg.vocab)
+    return logits, new_pages                                 # (B, W, V)
+
+
+def verify_ticks_decoder(params: Params, cfg: ArchConfig,
+                         tokens: jax.Array, pages: Params,
+                         block_tables: jax.Array, lengths: jax.Array,
+                         active: jax.Array, budget: jax.Array,
+                         eos: jax.Array, history: jax.Array,
+                         write_limit: jax.Array, steps: jax.Array, *,
+                         max_seq: int, draft_len: int, ngram: int = 2,
+                         null_page: int | None = None
+                         ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                    Params]:
+    """Fused SPECULATIVE decode: N draft->verify->accept steps in one
+    dispatch, each advancing every live slot by 1..draft_len+1 tokens.
+
+    Per step, per slot: (1) the device-side n-gram drafter
+    (``models.draft.draft_ngram_propose``) proposes ``draft_len``
+    continuation tokens from the slot's own token history; (2) ONE
+    ``_verify_window`` forward scores the W = draft_len + 1 window
+    (last token + drafts) and scatters its K/V into the pool; (3) the
+    greedy-acceptance prefix is computed on-device — drafted token t is
+    accepted iff every earlier draft matched its argmax and draft[t] ==
+    argmax(logits[t]) — and the emitted tokens are argmax[0 ..
+    accepted], i.e. the accepted drafts plus the one correction token,
+    exactly the tokens non-speculative greedy decode would emit; (4)
+    the scheduler's ``_emit`` retirement rule (budget / eos / max_seq —
+    the same predicate ``decode_ticks_decoder`` replicates) caps the
+    emission prefix and flips exhausted slots inactive; (5) window
+    positions past the emission prefix are ROLLED BACK to their
+    pre-step pool contents, so rejected drafts leave no trace.
+
+    tokens/lengths/active/budget/eos: as in ``decode_ticks_decoder``.
+    history (B, H) int32: per-slot token context (prompt + generated,
+    history[b, lengths[b]] == tokens[b]), updated in-scan so later
+    steps draft against tokens accepted earlier in the same dispatch.
+    write_limit (B,) int32: one past the last cache position the
+    scheduler mapped real pages for (0 for inactive slots); window
+    writes at positions >= write_limit are routed to the null page —
+    their logits can only influence draft positions the emission cap
+    already excludes.  steps: (N,) dummy array whose length sets the
+    step count (shape-only, like ``decode_ticks``' keys).
+
+    Returns (blocks (N, B, W) int32, accepted (N, B) int32, updated
+    history, updated pages): blocks[n, b, t] is the t-th token slot b
+    emitted at step n, -1 past the emission prefix; accepted[n, b] is
+    how many of those emitted tokens were accepted DRAFTS (the
+    scheduler's acceptance stats — it cannot be inferred from the block
+    alone, because a flag-truncated window may end on an accepted draft
+    rather than the correction token); history is returned so the
+    scheduler can keep it DEVICE-resident across dispatches (its
+    appends mirror the host replay exactly; only slot churn —
+    admit/retire/preempt — forces a host re-upload).  Invariant (pinned
+    by tests/test_speculative.py): tokens and non-null pool contents
+    are BIT-IDENTICAL to running the fused non-speculative
+    ``decode_ticks`` for the same number of emitted tokens —
+    speculation is a pure perf optimization.
+    """
+    from repro.models.draft import draft_ngram_propose
+
+    w = draft_len + 1
+    b = tokens.shape[0]
+    page = next(iter(pages.values())).shape[2]
+    width = block_tables.shape[1]
+    if null_page is None:
+        null_page = next(iter(pages.values())).shape[1] - 1
+    offs_w = jnp.arange(w)
+
+    def step(carry, _):
+        toks, lens, act, bud, hist, pg = carry
+        props = draft_ngram_propose(hist, lens + 1, draft_len=draft_len,
+                                    ngram=ngram)
+        win = jnp.concatenate([toks[:, None], props], axis=1)  # (B, W)
+        # pool coordinates of the window; out-of-plan positions (past
+        # the mapped write plan, or any position of an inactive slot)
+        # are absorbed by the null page, mirroring _paged_tick's
+        # write_mask routing.
+        positions = lens[:, None] + offs_w[None, :]            # (B, W)
+        pp = jnp.clip(positions // page, 0, width - 1)
+        wp = jnp.take_along_axis(block_tables, pp, axis=1)
+        in_plan = act[:, None] & (positions < write_limit[:, None])
+        wp = jnp.where(in_plan, wp, null_page)
+        wo = positions % page
+        # pre-step window contents, for rolling back rejected writes
+        old = {name: leaf[:, wp, wo] for name, leaf in pg.items()}
+        logits, pg = _verify_window(params, cfg, win, pg, block_tables,
+                                    lens, wp, wo)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (B, W)
+        ok = (props == g[:, :draft_len]).astype(jnp.int32)
+        acc = jnp.cumprod(ok, axis=1).sum(axis=1)              # (B,)
+        # sequential _emit replay over the window (static W, unrolled):
+        # token j is emittable while the slot is alive and every earlier
+        # draft was accepted; budget/eos/max_seq flip the slot dead at
+        # exactly the scheduler's rule.
+        alive = act
+        new_toks, new_lens, new_bud = toks, lens, bud
+        cols = []
+        for j in range(w):
+            tok_j = g[:, j]
+            can = alive & (j <= acc)
+            cols.append(jnp.where(can, tok_j, -1))
+            new_toks = jnp.where(can, tok_j, new_toks)
+            new_lens = new_lens + can
+            new_bud = new_bud - can
+            done = ((new_bud <= 0) | (tok_j == eos)
+                    | (new_lens + 1 >= max_seq))
+            alive = alive & ~(can & done)
+        out = jnp.stack(cols, axis=1)                          # (B, W)
+        n_emit = new_lens - lens
+        # rollback: positions at window offsets >= n_emit revert to
+        # their pre-step contents — the pool ends the step exactly as
+        # if only the emitted tokens' KV had ever been written.
+        keep = offs_w[None, :] < n_emit[:, None]               # (B, W)
+        for name in pg:
+            cur = pg[name][:, wp, wo]
+            k_mask = keep.reshape((1, b, w) + (1,) * (cur.ndim - 3))
+            pg[name] = pg[name].at[:, wp, wo].set(
+                jnp.where(k_mask, cur, old[name]))
+        # history append: emitted token j becomes context index
+        # lens + 1 + j; un-emitted lanes are dropped.
+        hidx = jnp.where(keep, lens[:, None] + 1 + offs_w[None, :],
+                         hist.shape[1])
+        hist = hist.at[jnp.arange(b)[:, None], hidx].set(out,
+                                                         mode="drop")
+        # of the n_emit emitted tokens, min(n_emit, acc) were accepted
+        # drafts (the remainder — at most one — is the correction token)
+        return ((new_toks, new_lens, alive, new_bud, hist, pg),
+                (out, jnp.minimum(n_emit, acc).astype(jnp.int32)))
+
+    (_, _, _, _, history, pages), (blocks, accepted) = jax.lax.scan(
+        step, (tokens, lengths, active, budget, history, pages), steps)
+    return blocks, accepted, history, pages

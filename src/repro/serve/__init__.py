@@ -1,6 +1,7 @@
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.paging import BlockTables, PagePool, paco_page_size
+from repro.serve.paging import (BlockTables, PagePool, paco_draft_len,
+                                paco_page_size)
 from repro.serve.reference import reference_decode
 
 __all__ = ["Request", "ServeEngine", "BlockTables", "PagePool",
-           "paco_page_size", "reference_decode"]
+           "paco_draft_len", "paco_page_size", "reference_decode"]

@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import decode_step_paged, decode_ticks, \
-    paged_cache_leaf_specs, prefill_chunk, sample_tokens
+    paged_cache_leaf_specs, prefill_chunk, sample_tokens, verify_ticks
 from repro.serve import paging
 
 Params = Any
@@ -82,6 +82,33 @@ class ServeEngine:
     the decode columns compare old-vs-new like for like.
     ``top_k``/``temperature`` switch the device-side sampler from
     greedy argmax to top-k categorical (``models.sample_tokens``).
+
+    ``speculate`` turns on SPECULATIVE decoding (DESIGN.md §8.8): each
+    decode dispatch runs ``ticks_per_dispatch`` draft->verify->accept
+    steps, every step advancing each live slot by 1..draft_len+1 tokens
+    — drafts come from the device-side n-gram drafter
+    (``models.draft_ngram_propose``, ``draft_ngram`` tail length), the
+    verify forward scores the whole window in one pass, and rejected
+    drafts are rolled back so tokens AND pool contents stay
+    bit-identical to the non-speculative fused engine.  ``speculate=N``
+    drafts N tokens per window; ``speculate=0`` plans the window as a
+    PACO leaf tile of the cache cuboid (``paging.paco_draft_len``).
+    Greedy-only: combining it with top-k sampling raises (exact
+    rejection sampling is the follow-up).
+
+    ``spec_min_accept`` is the ADAPTIVE FALLBACK threshold: when the
+    rolling draft-acceptance rate (last 32 verify windows) drops below
+    it, the scheduler dispatches the plain fused decode instead —
+    speculation must never cost throughput on a workload it cannot
+    draft (a verify window spends ~W tokens of model compute to emit
+    one token at zero acceptance).  Every 16th skipped dispatch runs a
+    speculative PROBE to re-detect workload shifts.  Because
+    speculative and non-speculative dispatches are bit-identical,
+    switching is free — no parity, pool, or scheduling consequence.
+    The break-even acceptance is backend-dependent (a weight-bandwidth
+    -bound accelerator verifies W tokens for nearly the cost of one;
+    a compute-bound CPU does not), so tune per deployment; 0 disables
+    the fallback.
     """
 
     def __init__(self, params: Params, cfg: ArchConfig, *, slots: int = 4,
@@ -90,7 +117,8 @@ class ServeEngine:
                  prefill_chunk_len: int | None = None, mesh=None,
                  ticks_per_dispatch: int = 8, fused: bool = True,
                  top_k: int | None = None, temperature: float = 1.0,
-                 seed: int = 0):
+                 speculate: int | None = None, draft_ngram: int = 2,
+                 spec_min_accept: float = 0.25, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -99,7 +127,12 @@ class ServeEngine:
         feat = cfg.mla.kv_lora if cfg.attn == "mla" else cfg.head_dim
         self.page = page_size or paging.paco_page_size(
             slots, max_seq, feat)
-        assert max_seq % self.page == 0, (max_seq, self.page)
+        if max_seq % self.page != 0:
+            raise ValueError(
+                f"page_size={self.page} does not divide max_seq="
+                f"{max_seq}: every sequence must span whole pages so "
+                f"block tables stay rectangular — pass a page_size that "
+                f"divides max_seq, or omit it for the PACO leaf size")
         self.pages_per_seq = max_seq // self.page
         # chunk: a few pages per jitted prefill call, dividing max_seq so
         # padded chunks never overrun the block table.
@@ -108,16 +141,53 @@ class ServeEngine:
             while (prefill_chunk_len * 2 <= min(64, max_seq)
                    and max_seq % (prefill_chunk_len * 2) == 0):
                 prefill_chunk_len *= 2
-        assert prefill_chunk_len % self.page == 0
-        assert max_seq % prefill_chunk_len == 0
+        if prefill_chunk_len % self.page != 0:
+            raise ValueError(
+                f"prefill_chunk_len={prefill_chunk_len} is not a "
+                f"multiple of page_size={self.page}: each prefill chunk "
+                f"scatters whole pages (no read-modify-write)")
+        if max_seq % prefill_chunk_len != 0:
+            raise ValueError(
+                f"prefill_chunk_len={prefill_chunk_len} does not divide "
+                f"max_seq={max_seq}: a padded final chunk would overrun "
+                f"the block table")
         self.chunk = prefill_chunk_len
         assert ticks_per_dispatch >= 1, ticks_per_dispatch
         self.ticks = ticks_per_dispatch
         self.fused = fused
+        self.draft_len = None
+        self.draft_ngram = draft_ngram
+        if speculate is not None:
+            if not fused:
+                raise ValueError(
+                    "speculate requires the fused engine (fused=True): "
+                    "the legacy single-tick loop has no verify dispatch")
+            if top_k is not None or temperature != 1.0:
+                raise NotImplementedError(
+                    f"speculative decoding is greedy-only (got top_k="
+                    f"{top_k}, temperature={temperature}): sampled "
+                    "decoding would need exact REJECTION SAMPLING over "
+                    "the draft window to preserve the output "
+                    "distribution — a follow-up; drop --speculate or "
+                    "use the default greedy sampler")
+            if speculate < 0:
+                raise ValueError(f"speculate must be >= 0 "
+                                 f"(0 = PACO-planned), got {speculate}")
+            self.draft_len = (speculate if speculate > 0 else
+                              paging.paco_draft_len(slots, max_seq, feat))
+        self.spec_min_accept = spec_min_accept
+        # adaptive-fallback state: accepted-draft counts of the last 32
+        # verify windows, and how many dispatches the fallback has
+        # skipped since the last speculative probe.
+        self._spec_recent = deque(maxlen=32)
+        self._spec_skipped = 0
         n_pages = (pool_pages if pool_pages is not None
                    else slots * self.pages_per_seq)
-        assert n_pages >= self.pages_per_seq, \
-            "pool must hold at least one full sequence"
+        if n_pages < self.pages_per_seq:
+            raise ValueError(
+                f"pool_pages={n_pages} < pages_per_seq="
+                f"{self.pages_per_seq}: the pool must hold at least one "
+                f"full max_seq sequence or a lone request can never map")
         self.pool = paging.init_pool(
             paged_cache_leaf_specs(cfg, self.page), n_pages, self.page)
         self.tables = paging.BlockTables(slots, self.pages_per_seq,
@@ -147,12 +217,25 @@ class ServeEngine:
         self._last_tok = [0] * slots
         self._admit_order = [-1] * slots
         self._admit_seq = 0
+        # per-slot token history (prompt + generated; row i valid up to
+        # _ctx_len[i] inclusive, _hist[i, _ctx_len[i]] == _last_tok[i]):
+        # the device-side n-gram drafter's haystack.  Maintained by
+        # prefill and every dispatch replay; cleared on release.
+        # ``_hist_dev`` caches the device copy between speculative
+        # dispatches (the verify scan's appends mirror the host replay
+        # exactly, so it stays valid until slot churn or a fused
+        # fallback dispatch touches the host copy alone — then it is
+        # dropped and re-uploaded once).
+        self._hist = np.zeros((slots, max_seq), np.int32)
+        self._hist_dev: jax.Array | None = None
         self._key = jax.random.PRNGKey(seed)
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
                       "preemptions": 0, "retired": 0, "dispatches": 0,
                       "host_syncs": 0, "max_table_width": 0,
                       "prefill_tokens": 0, "decode_tokens": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "spec_windows": 0, "drafted_tokens": 0,
+                      "accepted_tokens": 0, "spec_fallback_dispatches": 0}
 
         def _prefill_fn(p, toks, start, last, key, pg, row):
             logits, pg = prefill_chunk(p, cfg, toks, start, pg, row)
@@ -175,6 +258,27 @@ class ServeEngine:
             {"out_shardings": (tok_out, pool_out)}
         self._prefill = jax.jit(_prefill_fn, donate_argnums=(5,), **out_sh)
         self._decode = jax.jit(_decode_fn, donate_argnums=(2,), **out_sh)
+        if self.draft_len is not None:
+            draft_len, ngram = self.draft_len, self.draft_ngram
+
+            def _verify_fn(p, toks, pg, bt, lens, act, bud, eos, hist,
+                           limit, steps):
+                return verify_ticks(p, cfg, toks, pg, bt, lens, act, bud,
+                                    eos, hist, limit, steps,
+                                    max_seq=max_seq, draft_len=draft_len,
+                                    ngram=ngram, null_page=null_page)
+
+            # same donation discipline as _decode; on a mesh the pool
+            # out_shardings come from the same helper as placement
+            # (dist.sharding.verify_shardings) so donation stays
+            # layout-stable.
+            v_sh = {}
+            if mesh is not None:
+                from repro.dist import sharding as D
+                v_sh = {"out_shardings":
+                        D.verify_shardings(cfg, mesh, self.pool.pools)}
+            self._verify = jax.jit(_verify_fn, donate_argnums=(2,),
+                                   **v_sh)
         if not fused:
             # PR 3 old DECODE path: one undonated single-tick step per
             # token, full-width tables, host-side argmax — kept as the
@@ -224,6 +328,8 @@ class ServeEngine:
         self._ctx_len[slot] = 0
         self._last_tok[slot] = 0
         self._admit_order[slot] = -1
+        self._hist[slot] = 0
+        self._hist_dev = None
 
     def _retire(self, slot: int) -> None:
         req = self.active[slot]
@@ -280,6 +386,8 @@ class ServeEngine:
                 req = self.active[slot]
                 tok = int(tok)
                 self._last_tok[slot] = tok
+                self._hist[slot, self._ctx_len[slot]] = tok
+                self._hist_dev = None
                 if self._emit(req, tok):
                     self._retire(slot)
 
@@ -315,6 +423,8 @@ class ServeEngine:
         self.stats["prefill_tokens"] += len(ctx)
         self.stats["prefill_s"] += time.perf_counter() - t0
         self._ctx_len[slot] = len(ctx)
+        self._hist[slot, :len(ctx)] = ctx
+        self._hist_dev = None
         return tok
 
     def _ensure_decode_pages(self, n: int = 1) -> None:
@@ -362,14 +472,44 @@ class ServeEngine:
         w = self._planned_writes(slot, n)
         return ctx // self.page, (ctx + w - 1) // self.page + 1
 
+    def _use_speculation(self) -> bool:
+        """Acceptance-aware fallback: speculate unless the rolling
+        acceptance rate of the last 32 verify windows fell below
+        ``spec_min_accept`` — then dispatch plain fused decode, probing
+        speculatively every 16th dispatch to catch workload shifts.
+        Free to toggle per dispatch: both paths are bit-identical."""
+        if self.draft_len is None:
+            return False
+        recent = self._spec_recent
+        if (not self.spec_min_accept
+                or len(recent) < recent.maxlen):
+            return True
+        rate = sum(recent) / (len(recent) * self.draft_len)
+        if rate >= self.spec_min_accept:
+            self._spec_skipped = 0
+            return True
+        self._spec_skipped += 1
+        if self._spec_skipped >= 16:   # periodic probe
+            self._spec_skipped = 0
+            return True
+        return False
+
     def tick(self) -> int:
         """Admit + one decode dispatch (``ticks_per_dispatch`` fused
-        steps; a single step on the legacy path); returns #retired."""
+        steps — draft/verify steps when speculating; a single step on
+        the legacy path); returns #retired."""
         self._admit()
         if all(r is None for r in self.active):
             return 0
         n = self.ticks if self.fused else 1
-        self._ensure_decode_pages(n)
+        # speculative dispatches extend the per-slot page pre-mapping
+        # from n ticks to n x (draft_len + 1) window positions: every
+        # in-plan window write needs a real page even when the draft is
+        # later rejected (rollback restores contents, not mappings).
+        use_spec = self._use_speculation()
+        w = self.draft_len + 1 if use_spec else 1
+        span = n * w
+        self._ensure_decode_pages(span)
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return 0
@@ -380,14 +520,21 @@ class ServeEngine:
         # compiles stay O(log ticks)): a drain tail of short-budget
         # stragglers doesn't run whole-model ticks with every lane
         # frozen.
-        n_eff = min(n, _width_bucket(
-            max(self._planned_writes(s, n) for s in live), n))
+        planned = max(self._planned_writes(s, span) for s in live)
+        n_eff = min(n, _width_bucket(-(-planned // w), n))
+        if use_spec:
+            return self._dispatch_spec(live, n_eff)
         return self._dispatch_fused(live, n_eff)
 
-    def _dispatch_fused(self, live: list[int], n: int) -> int:
-        """One fused decode dispatch: n on-device ticks, ONE host sync."""
+    def _dispatch_arrays(self, live: list[int], span: int):
+        """Per-slot device vectors shared by BOTH decode dispatch kinds
+        (block tables sliced to the span's width bucket, last tokens,
+        context lengths, active/budget/eos).  One construction site so
+        the speculative and non-speculative dispatches can never drift
+        apart — their bit-identical behavior is what makes the
+        acceptance-aware fallback free to switch between them."""
         width = _width_bucket(
-            max(self._write_page_range(s, n)[1] for s in live),
+            max(self._write_page_range(s, span)[1] for s in live),
             self.pages_per_seq)
         self.stats["max_table_width"] = max(
             self.stats["max_table_width"], width)
@@ -399,6 +546,14 @@ class ServeEngine:
                            for r in self.active], jnp.int32)
         eos = jnp.asarray([r.eos_id if r else -1 for r in self.active],
                           jnp.int32)
+        return bt, toks, lens, act, bud, eos
+
+    def _dispatch_fused(self, live: list[int], n: int) -> int:
+        """One fused decode dispatch: n on-device ticks, ONE host sync."""
+        if self.draft_len is not None:   # acceptance-aware fallback hit
+            self.stats["spec_fallback_dispatches"] += 1
+            self._hist_dev = None   # this dispatch appends host-side only
+        bt, toks, lens, act, bud, eos = self._dispatch_arrays(live, n)
         keys = jax.random.split(self._next_key(), n)
         t0 = time.perf_counter()
         with self._mesh_cm():
@@ -417,6 +572,7 @@ class ServeEngine:
                 tok = int(block[t, slot])
                 self._ctx_len[slot] += 1   # that tick wrote last_tok's KV
                 self._last_tok[slot] = tok
+                self._hist[slot, self._ctx_len[slot]] = tok
                 self.stats["decode_tokens"] += 1
                 if self._emit(req, tok):
                     # the device flag flipped this slot inactive at the
@@ -424,6 +580,73 @@ class ServeEngine:
                     # block[t', slot] entries are -1 filler.
                     self._retire(slot)
                     finished += 1
+                    break
+        return finished
+
+    def _dispatch_spec(self, live: list[int], n: int) -> int:
+        """One fused SPECULATIVE dispatch: n draft->verify->accept steps
+        on-device, ONE host sync of an (n, slots, draft_len + 1) token
+        block.  Each step advances a live slot by 1..draft_len+1 tokens
+        (the greedy-accepted drafts plus the correction token), so the
+        block replay below is ``_dispatch_fused``'s _emit replay with a
+        variable per-step advance; -1 entries mark the un-emitted tail
+        of each window (and every window of a retired slot)."""
+        w = self.draft_len + 1
+        span = n * w
+        bt, toks, lens, act, bud, eos = self._dispatch_arrays(live, span)
+        # one past the last position each slot's write plan mapped real
+        # pages for (window writes beyond it are null-routed on device)
+        limit = jnp.asarray(
+            [self._ctx_len[s] + self._planned_writes(s, span)
+             if self.active[s] is not None else 0
+             for s in range(self.slots)], jnp.int32)
+        # device-resident history when the last dispatch's copy is still
+        # valid (no slot churn, no fused fallback in between): the hot
+        # loop then uploads no per-dispatch history at all.
+        hist = (self._hist_dev if self._hist_dev is not None
+                else jnp.asarray(self._hist))
+        steps = jnp.zeros((n,), jnp.int32)   # shape-only: sets N
+        t0 = time.perf_counter()
+        with self._mesh_cm():
+            block, accepted, self._hist_dev, self.pool.pools = \
+                self._verify(self.params, toks, self.pool.pools, bt,
+                             lens, act, bud, eos, hist, limit, steps)
+        # the ONE device->host sync point per dispatch (the tiny
+        # accepted-count block rides along with the token block)
+        block = np.asarray(block)
+        accepted = np.asarray(accepted)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += n
+        self.stats["dispatches"] += 1
+        self.stats["host_syncs"] += 1
+        finished = 0
+        for slot in live:
+            req = self.active[slot]
+            retired = False
+            for t in range(n):
+                row = [int(x) for x in block[t, slot] if x >= 0]
+                if not row:
+                    break   # slot went inactive in an earlier step
+                self.stats["spec_windows"] += 1
+                self.stats["drafted_tokens"] += self.draft_len
+                # device-reported: a flag-truncated window can end on an
+                # accepted draft, so len(row) - 1 would undercount
+                acc_w = int(accepted[t, slot])
+                self.stats["accepted_tokens"] += acc_w
+                self._spec_recent.append(acc_w)
+                for tok in row:
+                    self._ctx_len[slot] += 1
+                    self._last_tok[slot] = tok
+                    self._hist[slot, self._ctx_len[slot]] = tok
+                    self.stats["decode_tokens"] += 1
+                    if self._emit(req, tok):
+                        # device flags stopped this slot at the same
+                        # token (verify_ticks mirrors _emit)
+                        self._retire(slot)
+                        finished += 1
+                        retired = True
+                        break
+                if retired:
                     break
         return finished
 
@@ -448,6 +671,7 @@ class ServeEngine:
             self._ctx_len[slot] += 1   # last_tok's KV was just written
             tok = int(nxt[slot])
             self._last_tok[slot] = tok
+            self._hist[slot, self._ctx_len[slot]] = tok
             self.stats["decode_tokens"] += 1
             if self._emit(req, tok):
                 self._retire(slot)

@@ -58,6 +58,29 @@ def paco_page_size(slots: int, max_seq: int, feat_dim: int, *,
     return max(d for d in range(1, seq_extent + 1) if max_seq % d == 0)
 
 
+def paco_draft_len(slots: int, max_seq: int, feat_dim: int, *,
+                   max_window: int = 8) -> int:
+    """Draft length for speculative decoding, planned from the VERIFY
+    cuboid rather than picked as a magic number.
+
+    The speculative verify step scores a (slots x window x feat_dim)
+    cuboid against the paged cache — the same shape family the 1-piece
+    planner tiles for the page pool, and the same balanced-partitioning
+    argument Ballard et al. make for strong-scaling matmul applies to
+    sizing it: the window should be a LEAF TILE of the cache cuboid, so
+    every slot's verify window spans exactly one page's sequence extent
+    (one whole-page scatter per window, the leaf's surface-minimizing
+    bytes per gather, and the tile stays cache-resident as slots scale).
+    We therefore reuse ``paco_page_size``'s leaf-tile plan of the
+    (slots x max_seq x feat_dim) cache cuboid, cap it at ``max_window``
+    (past ~8 positions the per-window acceptance probability, not the
+    tile shape, is the binding constraint), and subtract the window slot
+    the forced last-emitted token occupies: draft_len = window - 1.
+    """
+    page = paco_page_size(slots, max_seq, feat_dim)
+    return max(1, min(max_window, page) - 1)
+
+
 @dataclasses.dataclass
 class PagePool:
     """Fixed pool of KV pages plus the host-side free list.

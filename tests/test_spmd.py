@@ -221,6 +221,44 @@ def test_paged_serve_sharded_parity():
     assert "OK" in out
 
 
+def test_paged_serve_sharded_speculative_parity():
+    """SPECULATIVE model-parallel serving on a 4x2 host mesh: the verify
+    dispatch donates meshed pools through dist.sharding.verify_shardings
+    (placement and out_shardings from the same specs) and must emit
+    exactly the single-device reference tokens, for both cache
+    families."""
+    out = run_py("""
+        import dataclasses, jax
+        from repro.compat import make_mesh
+        from repro.configs import get_arch
+        from repro.models import init_params
+        from repro.serve import Request, ServeEngine, reference_decode
+        mesh = make_mesh((4, 2), ("data", "model"))
+        for arch in ("qwen3-0.6b", "deepseek-v2-236b"):
+            cfg = dataclasses.replace(get_arch(arch).reduced(),
+                                      tie_embeddings=False)
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            eng = ServeEngine(params, cfg, slots=4, max_seq=64,
+                              prefill_chunk_len=8, mesh=mesh,
+                              speculate=3, ticks_per_dispatch=4,
+                              spec_min_accept=0)
+            prompts = [[1, 2, 3, 1, 2, 3, 1], [9, 9, 9, 9, 9], [2, 8]]
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p, max_new_tokens=20))
+            done = eng.run_until_drained()
+            assert len(done) == len(prompts)
+            eng.check_page_invariants()
+            for r in done:
+                ref = reference_decode(params, cfg, r.prompt,
+                                       max_new_tokens=20, max_seq=64)
+                assert r.out == ref, (arch, r.uid, r.out, ref)
+            assert eng.stats["accepted_tokens"] > 0, \\
+                (arch, "no draft accepted under the mesh")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_sharded_forward_matches_unsharded():
     """Sharded forward == unsharded forward (the silent-corruption guard).
 
